@@ -1,0 +1,33 @@
+"""Paper Figures 9/10/18/19: Biot-Savart convergence (spectral + FD)."""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def run(quick=True):
+    sys.path.insert(0, "tests")
+    from test_biot_savart import linf
+    from repro.core.green import GreenKind
+
+    ns = (16, 32) if quick else (32, 64)
+    rows = []
+    for fig, g, fd in (("fig9", GreenKind.CHAT2, 0),
+                       ("fig9", GreenKind.HEJ4, 0),
+                       ("fig10", GreenKind.HEJ2, 6),
+                       ("fig18", GreenKind.HEJ4, 2),
+                       ("fig19", GreenKind.HEJ4, 4)):
+        t0 = time.time()
+        errs = [linf(n, g, fd) for n in ns]
+        us = (time.time() - t0) / len(ns) * 1e6
+        order = float(np.log(errs[0] / errs[-1]) / np.log(ns[-1] / ns[0]))
+        rows.append((f"{fig}_biot_{g}_fd{fd}", us,
+                     f"order={order:.2f};err={errs[-1]:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from common import emit
+    emit(run())

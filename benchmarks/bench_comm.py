@@ -1,0 +1,61 @@
+"""Paper Table II / Fig 11: comm-strategy comparison (a2a / pipelined /
+fused) on an 8-device pencil grid -- the accFFT-comparison analogue: the
+same forward+backward FFT workload under each strategy.
+
+Runs in a subprocess with 8 host devices so the main process keeps 1.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.core.bc import BCType
+from repro.core.comm import CommConfig
+from repro.distributed.pencil import DistributedPoissonSolver
+
+n = int(os.environ.get("BENCH_N", "64"))
+P = (BCType.PER, BCType.PER)
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+rng = np.random.default_rng(0)
+rows = []
+for strategy in ("a2a", "pipelined", "fused"):
+    s = DistributedPoissonSolver((n, n, n), 1.0, (P, P, P), mesh=mesh,
+                                 comm=CommConfig(strategy=strategy,
+                                                 n_chunks=2))
+    f = rng.standard_normal((n, n, n)).astype(np.float32)
+    u = s.solve(f); u.block_until_ready()
+    t0 = time.time()
+    reps = 5
+    for _ in range(reps):
+        u = s.solve(f); u.block_until_ready()
+    dt = (time.time() - t0) / reps
+    thr = f.nbytes / dt / 8 / 1e6   # MB/s per rank
+    rows.append({"strategy": strategy, "us": dt * 1e6,
+                 "mbps_rank": thr})
+print(json.dumps(rows))
+"""
+
+
+def run(quick=True):
+    env = dict(os.environ, PYTHONPATH="src", BENCH_N="48" if quick else "96")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SCRIPT],
+                         capture_output=True, text=True, env=env)
+    if out.returncode != 0:
+        return [("tab2_comm_error", 0.0, out.stderr[-200:])]
+    rows = json.loads(out.stdout.strip().splitlines()[-1])
+    return [(f"tab2_comm_{r['strategy']}", r["us"],
+             f"{r['mbps_rank']:.1f}MB/s/rank") for r in rows]
+
+
+if __name__ == "__main__":
+    from common import emit
+    emit(run())

@@ -1,0 +1,40 @@
+"""Paper Figures 6/7/8: convergence of the three validation cases."""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def run(quick=True):
+    sys.path.insert(0, "tests")
+    from test_poisson import CASES, linf_error
+    from repro.core.bc import DataLayout
+    from repro.core.green import GreenKind
+
+    rows = []
+    plan = {
+        "A": [GreenKind.CHAT2, GreenKind.LGF2, GreenKind.HEJ2],
+        "B": [GreenKind.CHAT2, GreenKind.LGF2, GreenKind.HEJ2,
+              GreenKind.HEJ4, GreenKind.HEJ6, GreenKind.HEJ0],
+        "C": [GreenKind.CHAT2, GreenKind.HEJ2, GreenKind.HEJ4],
+    }
+    ns = (16, 32) if quick else (32, 64)
+    for case, greens in plan.items():
+        _, bcs = CASES[case]
+        for g in greens:
+            errs, t0 = [], time.time()
+            for n in ns:
+                errs.append(linf_error(case, bcs, n, DataLayout.NODE, g))
+            us = (time.time() - t0) / len(ns) * 1e6
+            order = float(np.log(errs[0] / errs[-1]) /
+                          np.log(ns[-1] / ns[0]))
+            rows.append((f"fig{ {'A':6,'B':7,'C':8}[case] }_conv_{case}_{g}",
+                         us, f"order={order:.2f};err{ns[-1]}={errs[-1]:.2e}"))
+    return rows
+
+
+if __name__ == "__main__":
+    from common import emit
+    emit(run())

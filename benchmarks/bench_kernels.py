@@ -1,0 +1,45 @@
+"""Pallas kernels (interpret mode) vs jnp reference timings + allclose."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.fft_stockham import fft_stockham
+
+
+def run(quick=True):
+    import jax
+    from common import time_fn
+    rows = []
+    rng = np.random.default_rng(0)
+    n = 512 if quick else 2048
+    b = 64
+
+    re = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
+    im = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
+    t_kernel = time_fn(fft_stockham, re, im)
+    t_ref = time_fn(lambda a, c: ref.fft_ref(a, c), re, im)
+    gr, gi = fft_stockham(re, im)
+    wr, wi = ref.fft_ref(re, im)
+    err = float(jnp.max(jnp.abs(gr - wr)))
+    rows.append(("kern_fft_stockham", t_kernel * 1e6,
+                 f"ref_us={t_ref*1e6:.0f};maxerr={err:.1e}"))
+
+    g = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
+    f = (re + 1j * im).astype(jnp.complex64)
+    t_kernel = time_fn(ops.green_multiply, f, g, 0.5)
+    t_ref = time_fn(lambda a, c: a * c * 0.5, f, g)
+    rows.append(("kern_spectral_scale", t_kernel * 1e6,
+                 f"ref_us={t_ref*1e6:.0f}"))
+
+    t_kernel = time_fn(ops.dct2_post_twiddle, f)
+    rows.append(("kern_twiddle_pack", t_kernel * 1e6, "interpret"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "benchmarks")
+    from common import emit
+    emit(run())

@@ -1,0 +1,52 @@
+"""Assignment section Roofline: aggregate the dry-run records into the
+per-(arch x shape x mesh) roofline table (also rendered in EXPERIMENTS.md).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def load_records(pattern="results/dryrun/*.jsonl"):
+    recs = {}
+    for path in sorted(glob.glob(pattern)):
+        with open(path) as f:
+            for line in f:
+                try:
+                    r = json.loads(line)
+                except json.JSONDecodeError:
+                    continue
+                if r.get("status") != "ok":
+                    continue
+                mesh = dict(r.get("mesh", []))
+                key = (r["arch"], r["shape"],
+                       "multi" if "pod" in mesh else "single",
+                       r.get("comm", "a2a"))
+                recs[key] = r          # later files win (hillclimbed runs)
+    return recs
+
+
+def run(quick=True):
+    rows = []
+    for (arch, shape, mesh, comm), r in sorted(load_records().items()):
+        rf = r.get("roofline", {})
+        if not rf:
+            continue
+        dom = rf.get("dominant", "?")
+        frac = rf.get("roofline_frac")
+        rows.append((
+            f"roofline_{arch}_{shape}_{mesh}_{comm}",
+            max(rf.get("t_compute_s", 0), rf.get("t_memory_s", 0),
+                rf.get("t_collective_s", 0)) * 1e6,
+            f"dominant={dom};frac={frac if frac is None else round(frac, 4)};"
+            f"useful={rf.get('useful_flops_frac') and round(rf['useful_flops_frac'], 3)}"))
+    if not rows:
+        rows = [("roofline_missing", 0.0,
+                 "run repro.launch.dryrun first")]
+    return rows
+
+
+if __name__ == "__main__":
+    from common import emit
+    emit(run())

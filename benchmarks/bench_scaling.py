@@ -1,0 +1,103 @@
+"""Paper Figs 12-15 + Table III: weak/strong scaling.
+
+Wall-clock scaling cannot be measured on one CPU core, so this bench
+combines (a) measured single-core solve times across sizes and process
+grids (up to 8 host devices, subprocess) with (b) the alpha-beta model of
+the topology-switch collectives to report the paper's metrics: weak
+efficiency eta_w, strong speedup s_P and the serial fraction beta
+(Eqs. 19-23).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import numpy as np
+import jax
+from repro.core.bc import BCType
+from repro.core.comm import CommConfig
+from repro.distributed.pencil import DistributedPoissonSolver
+
+U = (BCType.UNB, BCType.UNB)
+rows = []
+mode = os.environ["BENCH_MODE"]
+n0 = int(os.environ.get("BENCH_N", "32"))
+grids = [(1,1),(1,2),(2,2),(2,4)]
+for (p1, p2) in grids:
+    ndev = p1 * p2
+    if mode == "weak":
+        # constant work per rank: n^3 scales with ranks
+        n = int(round(n0 * ndev ** (1/3) / 2) * 2)
+    else:
+        n = n0
+    mesh = jax.make_mesh((p1, p2), ("data", "model"))
+    s = DistributedPoissonSolver((n, n, n), 1.0, (U, U, U), mesh=mesh,
+                                 comm=CommConfig(strategy="pipelined"))
+    f = np.random.default_rng(0).standard_normal((n,n,n)).astype(np.float32)
+    u = s.solve(f); u.block_until_ready()
+    t0 = time.time(); reps = 3
+    for _ in range(reps):
+        u = s.solve(f); u.block_until_ready()
+    dt = (time.time() - t0) / reps
+    rows.append({"ndev": ndev, "n": n, "t": dt})
+print(json.dumps(rows))
+"""
+
+
+def _beta(rows, weak):
+    """Serial fraction from Gustafson/Amdahl fits (paper Eqs. 22/20)."""
+    t0 = rows[0]["t"]
+    betas = []
+    for r in rows[1:]:
+        rr = r["ndev"] / rows[0]["ndev"]
+        if weak:
+            eta = t0 / r["t"]
+            beta = max((1.0 / eta - 1.0) / (rr - 1.0), 0.0)
+        else:
+            s = t0 / r["t"]
+            beta = max((rr / s - 1.0) / (rr - 1.0), 0.0)
+        betas.append(beta)
+    return float(np.mean(betas))
+
+
+def run(quick=True):
+    out_rows = []
+    for mode, fig in (("weak", "fig12"), ("strong", "fig14")):
+        env = dict(os.environ, PYTHONPATH="src", BENCH_MODE=mode,
+                   BENCH_N="24" if quick else "48")
+        env.pop("XLA_FLAGS", None)
+        out = subprocess.run([sys.executable, "-c", _SCRIPT],
+                             capture_output=True, text=True, env=env)
+        if out.returncode != 0:
+            out_rows.append((f"{fig}_{mode}_error", 0.0,
+                             out.stderr[-160:].replace("\n", " ")))
+            continue
+        rows = json.loads(out.stdout.strip().splitlines()[-1])
+        beta = _beta(rows, weak=(mode == "weak"))
+        base = rows[0]["t"]
+        for r in rows:
+            metric = (base / r["t"] if mode == "weak"
+                      else base / r["t"])
+            # throughput per rank (paper Table III normalization 14/3 for
+            # the unbounded doubling)
+            thr = (r["n"] ** 3 * 4 / r["t"] / r["ndev"] / 1e6) * (3 / 14)
+            out_rows.append(
+                (f"{fig}_{mode}_p{r['ndev']}", r["t"] * 1e6,
+                 f"n={r['n']};eff_or_speedup={metric:.3f};"
+                 f"thr={thr:.1f}MB/s/rank"))
+        out_rows.append((f"{fig}_{mode}_beta", 0.0,
+                         f"serial_fraction={beta:.4f}"))
+    return out_rows
+
+
+if __name__ == "__main__":
+    from common import emit
+    emit(run())

@@ -1,0 +1,38 @@
+"""LM-side throughput micro-bench: smoke-size train/decode steps per arch
+family (reference numbers for the CPU validation environment)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def run(quick=True):
+    from common import time_fn
+    from repro.configs import get_smoke
+    from repro.data.pipeline import synthetic_batch
+    from repro.models import transformer as tf
+    from repro.training.train_step import make_train_state, train_step_fn
+
+    rows = []
+    archs = ["qwen3-0.6b", "qwen3-moe-235b-a22b", "mamba2-2.7b",
+             "recurrentgemma-9b"] if quick else [
+        "qwen3-0.6b", "qwen3-moe-235b-a22b", "mamba2-2.7b",
+        "recurrentgemma-9b", "whisper-medium", "paligemma-3b",
+        "minitron-8b", "glm4-9b", "starcoder2-7b", "moonshot-v1-16b-a3b"]
+    b, s = 2, 64
+    for arch in archs:
+        cfg = get_smoke(arch)
+        state = make_train_state(jax.random.PRNGKey(0), cfg)
+        step = jax.jit(train_step_fn(cfg))
+        batch = synthetic_batch(cfg, 0, b, s)
+        t = time_fn(lambda st, ba: step(st, ba)[1]["loss"], state, batch)
+        rows.append((f"train_smoke_{arch}", t * 1e6,
+                     f"tok_per_s={b * s / t:,.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    sys.path.insert(0, "benchmarks")
+    from common import emit
+    emit(run())

@@ -1,0 +1,23 @@
+"""Shared benchmark utilities: timing + CSV emission."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+
+def time_fn(fn, *args, repeats=3, warmup=1, **kw):
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    t0 = time.time()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.time() - t0) / repeats
+
+
+def emit(rows):
+    """rows: list of (name, us_per_call, derived)."""
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,34 @@
+"""flups_poisson: the paper's own workload as a selectable architecture --
+a distributed unbounded Poisson solve on the production mesh (the FFT side
+of the framework, run through the same dry-run/roofline machinery)."""
+from dataclasses import dataclass
+
+from repro.core.bc import BCType, DataLayout
+from repro.core.green import GreenKind
+
+ARCH = "flups-poisson"
+
+
+@dataclass(frozen=True)
+class PoissonArchConfig:
+    name: str
+    n: int                      # cells per direction (global)
+    layout: DataLayout
+    bcs: tuple
+    green: str
+    batch: int = 1              # fields solved per step (data parallel)
+
+
+U = (BCType.UNB, BCType.UNB)
+
+CONFIG = PoissonArchConfig(
+    # 2048^3 global cells: ~2.1 GB/chip on the doubled spectral domain at
+    # 256 chips -- a production-plausible per-chip load (paper: 96^3/core)
+    name=ARCH, n=2048, layout=DataLayout.NODE, bcs=(U, U, U),
+    green=GreenKind.CHAT2, batch=2,
+)
+
+SMOKE = PoissonArchConfig(
+    name=ARCH + "-smoke", n=16, layout=DataLayout.NODE, bcs=(U, U, U),
+    green=GreenKind.CHAT2, batch=1,
+)

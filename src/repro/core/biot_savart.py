@@ -1,0 +1,100 @@
+"""Biot-Savart solver:  lap(u) = curl(f)  (paper section V).
+
+Forward-transform the three components of ``f`` (each with its own BCs),
+evaluate the curl in spectral space (DCT<->DST swaps + i*omega factors),
+multiply by the Green's function assembled on the *velocity* plans, and
+transform backward with the velocity plans.
+
+The velocity BCs are derived from the vorticity BCs by the swap algebra:
+component c of ``curl f`` differentiates f_b along a (cyclic), flipping
+even<->odd along the differentiated direction only.  Both curl terms must
+land in the same basis -- asserted at plan time; this is the compatibility
+condition on the user-provided vorticity BCs.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .bc import BCType, DirBC, DataLayout
+from . import green as gr
+from .solver import make_plan, build_green, _fwd_1d, _bwd_1d
+from .spectral import apply_derivative, swap_bc
+
+__all__ = ["BiotSavartSolver"]
+
+_CYCLIC = ((0, 1, 2), (1, 2, 0), (2, 0, 1))  # (c, a, b): u_c = d_a f_b - d_b f_a
+
+
+def _swap_dir(bcs_dir: DirBC) -> DirBC:
+    return DirBC(swap_bc(bcs_dir.left), swap_bc(bcs_dir.right))
+
+
+class BiotSavartSolver:
+    """u = solve(f): lap(u) = curl(f) with per-component BCs.
+
+    ``bcs``: (3, 3) nested sequence -- bcs[c][d] is the (left, right) BC
+    pair of vorticity component c along direction d.
+    """
+
+    def __init__(self, shape, L, bcs, layout=DataLayout.CELL,
+                 green_kind=gr.GreenKind.CHAT2, fd_order: int = 0,
+                 eps_factor: float = 2.0):
+        self.fd_order = fd_order
+        bcs = [[DirBC(*b) if not isinstance(b, DirBC) else b for b in row]
+               for row in bcs]
+        self.fplans = [make_plan(shape, L, bcs[c], layout, green_kind,
+                                 eps_factor) for c in range(3)]
+        # velocity BCs from term d_a f_b; cross-checked against d_b f_a
+        self.uplans = []
+        for c, a, b in _CYCLIC:
+            bc1 = [_swap_dir(bcs[b][d]) if d == a else bcs[b][d]
+                   for d in range(3)]
+            bc2 = [_swap_dir(bcs[a][d]) if d == b else bcs[a][d]
+                   for d in range(3)]
+            if bc1 != bc2:
+                raise ValueError(
+                    f"incompatible vorticity BCs for velocity component {c}: "
+                    f"{bc1} vs {bc2}")
+            self.uplans.append(make_plan(shape, L, bc1, layout, green_kind,
+                                         eps_factor))
+        self.greens = [build_green(p) for p in self.uplans]
+        self._solve = jax.jit(self._solve_impl)
+
+    @property
+    def input_shape(self):
+        return (3,) + self.fplans[0].input_shape
+
+    def _fwd(self, f, plan):
+        y = f
+        for d in plan.order:
+            y = _fwd_1d(y, plan.dirs[d])
+        return y
+
+    def _bwd(self, y, plan, dtype):
+        for d in reversed(plan.order):
+            y = _bwd_1d(y, plan.dirs[d], dtype)
+        if jnp.iscomplexobj(y):
+            y = y.real
+        return y.astype(dtype)
+
+    def _solve_impl(self, f):
+        fh = [self._fwd(f[c], self.fplans[c]) for c in range(3)]
+        out = []
+        for c, a, b in _CYCLIC:
+            up = self.uplans[c]
+            t1 = apply_derivative(fh[b], self.fplans[b].dirs[a],
+                                  up.dirs[a], self.fd_order)
+            t2 = apply_derivative(fh[a], self.fplans[a].dirs[b],
+                                  up.dirs[b], self.fd_order)
+            uhat = (t1 - t2) * jnp.asarray(self.greens[c]).astype(
+                t1.dtype if not jnp.iscomplexobj(t1) else
+                jnp.asarray(self.greens[c]).dtype)
+            out.append(self._bwd(uhat, up, f.dtype))
+        return jnp.stack(out)
+
+    def solve(self, f):
+        f = jnp.asarray(f)
+        assert f.shape == self.input_shape, (f.shape, self.input_shape)
+        return self._solve(f)

@@ -1,0 +1,384 @@
+"""FFT-based Poisson solver (the flups pipeline), single-process reference.
+
+The solve is the paper's algorithm:
+
+  forward:  for each direction (r2r dirs first, then semi-unbounded r2r,
+            then the DFT dirs -- the first DFT dir is real-to-complex):
+            shuffle the direction to the last axis, pad / slice per the BC
+            convention (section II), 1-D transform;
+  multiply: pointwise with the transformed Green's function (+ quadrature
+            weight h per unbounded-ish direction and the r2r normalization);
+  backward: inverse transforms in reverse order, crop, write back the
+            convention-overwritten boundary values.
+
+The distributed version (``repro.core.comm`` + ``repro.distributed``) swaps
+the axis shuffles for pencil topology switches; the per-direction math here
+is reused unchanged.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import scipy.fft as sfft
+
+from .bc import (BCType, DataLayout, DirBC, TransformKind, r2r_kind,
+                 INVERSE_KIND)
+from . import transforms as tr
+from . import green as gr
+
+__all__ = ["Plan1D", "PoissonPlan", "PoissonSolver", "make_plan"]
+
+
+@dataclass(frozen=True)
+class Plan1D:
+    dim: int
+    bc: DirBC
+    layout: DataLayout
+    n: int                  # number of cells; node layout owns n+1 points
+    L: float
+    category: str           # "sym" | "semi" | "per" | "unb"
+    kind: TransformKind | None
+    dft: str | None         # "r2c" | "c2c" | None
+    n_pts: int              # points in the user array along this dim
+    in_start: int           # first user point handed to the transform
+    n_in: int               # number of user points handed to the transform
+    n_fft: int              # transform length (after padding)
+    n_out: int              # spectral storage size
+    flip: bool
+    koffset: int            # storage index -> mode index offset
+    normfact: float
+    modes: tuple            # omega per storage index (length n_out)
+    zero_left: bool = False   # backward writes 0 at user index 0
+    zero_right: bool = False  # backward writes 0 at the last user index
+    per_dup: bool = False     # node-periodic: copy u_0 into u_N
+
+    @property
+    def h(self) -> float:
+        return self.L / self.n
+
+    @property
+    def is_unbounded_like(self) -> bool:
+        return self.category in ("semi", "unb")
+
+
+def _sym_plan(dim, bc, layout, n, L) -> Plan1D:
+    kind = r2r_kind(bc, layout)
+    h = L / n
+    if layout == DataLayout.NODE:
+        n_pts = n + 1
+        table = {
+            TransformKind.DST1: (1, n - 1, True, True),
+            TransformKind.DST3: (1, n, True, False),
+            TransformKind.DCT3: (0, n, False, True),
+            TransformKind.DCT1: (0, n + 1, False, False),
+        }
+        in_start, n_in, zl, zr = table[kind]
+    else:
+        n_pts, in_start, n_in, zl, zr = n, 0, n, False, False
+    half = kind in (TransformKind.DCT3, TransformKind.DCT4,
+                    TransformKind.DST3, TransformKind.DST4)
+    koff = 1 if kind in (TransformKind.DST1, TransformKind.DST2) else 0
+    k = np.arange(n_in) + koff
+    modes = (k + 0.5) * np.pi / L if half else k * np.pi / L
+    return Plan1D(dim, bc, layout, n, L, "sym", kind, None, n_pts,
+                  in_start, n_in, n_in, n_in, False, koff,
+                  tr.r2r_normfact(kind, n_in), tuple(modes), zl, zr)
+
+
+def _per_plan(dim, bc, layout, n, L, dft) -> Plan1D:
+    n_pts = n + 1 if layout == DataLayout.NODE else n
+    if dft == "r2c":
+        n_out = n // 2 + 1
+        modes = 2.0 * np.pi * np.arange(n_out) / L
+    else:
+        n_out = n
+        modes = 2.0 * np.pi * np.fft.fftfreq(n) * n / L
+    return Plan1D(dim, bc, layout, n, L, "per", None, dft, n_pts, 0, n, n,
+                  n_out, False, 0, 1.0, tuple(modes),
+                  per_dup=(layout == DataLayout.NODE))
+
+
+def _unb_plan(dim, bc, layout, n, L, dft) -> Plan1D:
+    n_pts = n + 1 if layout == DataLayout.NODE else n
+    n_in = n_pts
+    n_fft = 2 * n
+    if dft == "r2c":
+        n_out = n + 1
+        modes = 2.0 * np.pi * np.arange(n_out) / (2.0 * L)
+    else:
+        n_out = n_fft
+        modes = 2.0 * np.pi * np.fft.fftfreq(n_fft) * n_fft / (2.0 * L)
+    return Plan1D(dim, bc, layout, n, L, "unb", None, dft, n_pts, 0, n_in,
+                  n_fft, n_out, False, 0, 1.0, tuple(modes))
+
+
+def _semi_plan(dim, bc, layout, n, L) -> Plan1D:
+    """Semi-unbounded: doubled domain + same-symmetry r2r at both ends.
+
+    The rhs support [0, L] inside the 2L transform domain makes the far-end
+    image exact (Hockney doubling, see tests/test_poisson.py oracle).
+    """
+    flip = bc.right != BCType.UNB          # symmetry end on the right
+    sym = bc.right if flip else bc.left
+    pair = DirBC(sym, sym)
+    kind = r2r_kind(pair, layout)          # on the doubled domain
+    if layout == DataLayout.NODE:
+        n_pts = n + 1
+        if kind == TransformKind.DST1:     # odd: interior of doubled domain
+            in_start, n_in, n_fft = 1, n, 2 * n - 1
+            zl, zr = True, False
+        else:                              # DCT1 on 2n+1 points
+            in_start, n_in, n_fft = 0, n + 1, 2 * n + 1
+            zl = zr = False
+    else:
+        n_pts, in_start, n_in, n_fft = n, 0, n, 2 * n
+        zl = zr = False
+    koff = 1 if kind in (TransformKind.DST1, TransformKind.DST2) else 0
+    modes = (np.arange(n_fft) + koff) * np.pi / (2.0 * L)
+    return Plan1D(dim, bc, layout, n, L, "semi", kind, None, n_pts,
+                  in_start, n_in, n_fft, n_fft, flip, koff,
+                  tr.r2r_normfact(kind, n_fft), tuple(modes), zl, zr)
+
+
+@dataclass(frozen=True)
+class PoissonPlan:
+    dirs: tuple            # Plan1D per logical dim (0..2)
+    order: tuple           # execution order of dims (forward)
+    green_kind: str
+    eps_factor: float
+
+    @property
+    def input_shape(self):
+        return tuple(p.n_pts for p in self.dirs)
+
+
+def make_plan(shape, L, bcs, layout=DataLayout.CELL,
+              green_kind=gr.GreenKind.CHAT2, eps_factor=2.0) -> PoissonPlan:
+    """``shape`` = cells per dim; ``bcs`` = 3 (left,right) BCType pairs."""
+    ndim = len(shape)
+    bcs = tuple(DirBC(*b) if not isinstance(b, DirBC) else b for b in bcs)
+    for b in bcs:
+        b.validate()
+    sym_dims, semi_dims, dft_dims = [], [], []
+    for d, b in enumerate(bcs):
+        if b.is_unbounded or b.is_periodic:
+            dft_dims.append(d)
+        elif b.is_semi_unbounded:
+            semi_dims.append(d)
+        else:
+            sym_dims.append(d)
+    order = tuple(sym_dims + semi_dims + dft_dims)
+    plans = [None] * ndim
+    first_dft = dft_dims[0] if dft_dims else None
+    for d, b in enumerate(bcs):
+        Ld = L[d] if isinstance(L, (tuple, list)) else L
+        if b.is_periodic:
+            dft = "r2c" if d == first_dft else "c2c"
+            plans[d] = _per_plan(d, b, layout, shape[d], Ld, dft)
+        elif b.is_unbounded:
+            dft = "r2c" if d == first_dft else "c2c"
+            plans[d] = _unb_plan(d, b, layout, shape[d], Ld, dft)
+        elif b.is_semi_unbounded:
+            plans[d] = _semi_plan(d, b, layout, shape[d], Ld)
+        else:
+            plans[d] = _sym_plan(d, b, layout, shape[d], Ld)
+    return PoissonPlan(tuple(plans), order, green_kind, eps_factor)
+
+
+# ---------------------------------------------------------------------------
+# Green's function assembly (numpy, plan time)
+# ---------------------------------------------------------------------------
+
+def _green_phys_coord(p: Plan1D) -> np.ndarray:
+    """Physical sample offsets (units of h index) for an unbounded-ish dir."""
+    if p.category == "unb":
+        j = np.arange(p.n_fft)
+        return np.minimum(j, p.n_fft - j).astype(np.float64)
+    # semi: node-sampled kernel on [0, 2L]: DCT-I grid with 2n+1 points
+    return np.arange(2 * p.n + 1, dtype=np.float64)
+
+
+def _green_dct1_align(gh: np.ndarray, axis: int, p: Plan1D) -> np.ndarray:
+    """DCT-I transform of the kernel along a semi dir + koffset alignment."""
+    gh = sfft.dct(gh, type=1, axis=axis, norm=None)
+    sl = [slice(None)] * gh.ndim
+    sl[axis] = slice(p.koffset, p.koffset + p.n_out)
+    return gh[tuple(sl)]
+
+
+def build_green(plan: PoissonPlan) -> np.ndarray:
+    """Transformed Green's function aligned with the rhs spectral storage."""
+    dirs = plan.dirs
+    unb = [p for p in dirs if p.is_unbounded_like]
+    spec = [p for p in dirs if not p.is_unbounded_like]
+    n_unb = len(unb)
+    kind = plan.green_kind
+    hs = [p.h for p in dirs]
+    h_ref = float(np.min([p.h for p in unb])) if unb else float(np.min(hs))
+
+    if n_unb == 0:
+        w = [np.asarray(p.modes) for p in dirs]
+        grids = np.meshgrid(*w, indexing="ij")
+        w2 = sum(g * g for g in grids)
+        gh = gr.spectral_symbol(kind, w2, h_ref, w_axes=w,
+                                eps_factor=plan.eps_factor)
+        return gh
+
+    # physical axes for unbounded-ish dirs, mode axes for spectral dirs
+    axes_coord = []
+    for p in dirs:
+        if p.is_unbounded_like:
+            axes_coord.append(("phys", _green_phys_coord(p) * p.h))
+        else:
+            axes_coord.append(("mode", np.asarray(p.modes)))
+    shape = tuple(len(c[1]) for c in axes_coord)
+    g = np.zeros(shape, dtype=np.float64)
+
+    phys_dims = [d for d, p in enumerate(dirs) if p.is_unbounded_like]
+    mode_dims = [d for d, p in enumerate(dirs) if not p.is_unbounded_like]
+
+    def bcast(arr1d, d):
+        sh = [1] * len(dirs)
+        sh[d] = len(arr1d)
+        return np.asarray(arr1d).reshape(sh)
+
+    if n_unb == 3:
+        if kind == gr.GreenKind.LGF2:
+            idx = [np.abs(np.rint(axes_coord[d][1] / dirs[d].h)).astype(int)
+                   for d in range(3)]
+            ii = [bcast(ix, d) for d, ix in enumerate(idx)]
+            ii = np.broadcast_arrays(*ii)
+            g = gr.lgf3_on_grid(tuple(ii), h_ref)
+        else:
+            r2 = sum(bcast(axes_coord[d][1], d) ** 2 for d in range(3))
+            g = gr.kernel_3unb(kind, np.sqrt(r2), h_ref,
+                               eps_factor=plan.eps_factor)
+    elif n_unb == 2:
+        (dm,) = mode_dims
+        modes = np.asarray(axes_coord[dm][1])
+        r2 = sum(bcast(axes_coord[d][1], d) ** 2 for d in phys_dims)
+        r = np.sqrt(np.squeeze(r2, axis=dm))          # (n1, n2) radial grid
+        gk = gr.kernel_2unb_batch(kind, modes, r, h_ref,
+                                  eps_factor=plan.eps_factor)  # (nkz, n1, n2)
+        g = np.moveaxis(gk, 0, dm)
+    elif n_unb == 1:
+        (dp,) = phys_dims
+        x = axes_coord[dp][1]
+        g = np.zeros(shape)
+        # generic: iterate over mode combinations (cheap: O(N^2) combos)
+        it = np.ndindex(*[shape[d] if d != dp else 1 for d in range(len(dirs))])
+        for idx in it:
+            kperp2 = 0.0
+            for d in mode_dims:
+                kperp2 += axes_coord[d][1][idx[d]] ** 2
+            sl = list(idx)
+            sl[dp] = slice(None)
+            g[tuple(sl)] = gr.kernel_1unb(kind, kperp2, x, h_ref,
+                                          eps_factor=plan.eps_factor)
+    else:
+        raise AssertionError
+
+    # quadrature weight: h per unbounded-ish direction
+    for d in phys_dims:
+        g = g * dirs[d].h
+
+    # transform along unbounded-ish dirs
+    for d in phys_dims:
+        p = dirs[d]
+        if p.category == "unb":
+            gh = np.fft.fft(g, axis=d)
+            g = gh.real  # kernel is even-symmetric -> real spectrum
+            if p.dft == "r2c":
+                sl = [slice(None)] * g.ndim
+                sl[d] = slice(0, p.n_out)
+                g = g[tuple(sl)]
+        else:  # semi
+            g = _green_dct1_align(g, d, p)
+    return g
+
+
+# ---------------------------------------------------------------------------
+# forward / backward 1-D ops (jnp, last-axis via moveaxis)
+# ---------------------------------------------------------------------------
+
+def _fwd_1d(x, p: Plan1D):
+    # measured (EXPERIMENTS.md section Perf, flups cell): transforming along
+    # the native axis (jnp.fft axis=d) REGRESSES bytes by 11% -- XLA
+    # transposes internally for non-minor FFT axes and loses the fusion of
+    # the explicit moveaxis (a no-op when d is already last). Keep moveaxis.
+    x = jnp.moveaxis(x, p.dim, -1)
+    if p.flip:
+        x = x[..., ::-1]
+    x = x[..., p.in_start:p.in_start + p.n_in]
+    if p.n_fft > p.n_in:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, p.n_fft - p.n_in)]
+        x = jnp.pad(x, pad)
+    if p.category in ("sym", "semi"):
+        y = tr.r2r_forward(x, p.kind)
+    elif p.dft == "r2c":
+        y = jnp.fft.rfft(x, axis=-1)
+    else:
+        y = jnp.fft.fft(x, axis=-1)
+    return jnp.moveaxis(y, -1, p.dim)
+
+
+def _bwd_1d(y, p: Plan1D, out_dtype):
+    y = jnp.moveaxis(y, p.dim, -1)
+    if p.category in ("sym", "semi"):
+        x = tr.r2r_backward(y, p.kind) * p.normfact
+    elif p.dft == "r2c":
+        x = jnp.fft.irfft(y, n=p.n_fft, axis=-1)
+    else:
+        x = jnp.fft.ifft(y, axis=-1)
+    x = x[..., :p.n_in]
+    # place into the user-sized axis
+    left = p.in_start
+    right = p.n_pts - p.in_start - p.n_in - (1 if p.per_dup else 0)
+    if left or right:
+        pad = [(0, 0)] * (x.ndim - 1) + [(left, right)]
+        x = jnp.pad(x, pad)
+    if p.per_dup:  # node-periodic: duplicate the first point at the end
+        x = jnp.concatenate([x, x[..., :1]], axis=-1)
+    if p.flip:
+        x = x[..., ::-1]
+    return jnp.moveaxis(x, -1, p.dim)
+
+
+# ---------------------------------------------------------------------------
+# solver
+# ---------------------------------------------------------------------------
+
+class PoissonSolver:
+    """u = solve(f): FFT-based solution of lap(u) = f with mixed BCs."""
+
+    def __init__(self, shape, L, bcs, layout=DataLayout.CELL,
+                 green_kind=gr.GreenKind.CHAT2, eps_factor=2.0):
+        self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor)
+        self._green = build_green(self.plan)
+        self._solve = jax.jit(self._solve_impl)
+
+    @property
+    def input_shape(self):
+        return self.plan.input_shape
+
+    def _solve_impl(self, f):
+        plan = self.plan
+        green = jnp.asarray(self._green).astype(f.dtype)
+        y = f
+        for d in plan.order:
+            y = _fwd_1d(y, plan.dirs[d])
+        y = y * green
+        for d in reversed(plan.order):
+            y = _bwd_1d(y, plan.dirs[d], f.dtype)
+        if jnp.iscomplexobj(y):
+            y = y.real
+        return y.astype(f.dtype)
+
+    def solve(self, f):
+        f = jnp.asarray(f)
+        assert f.shape == self.input_shape, (f.shape, self.input_shape)
+        return self._solve(f)

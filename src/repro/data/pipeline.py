@@ -1,0 +1,49 @@
+"""Deterministic, stateless data pipeline.
+
+``batch = batch_for_step(step)`` is a pure function of (seed, step), so any
+host can (re)produce any shard at any time -- this is the straggler /
+elastic-restart story: no data-loader state to checkpoint, no skew between
+replacement hosts (DESIGN.md section 6).
+
+Two sources: ``synthetic`` (hash-derived tokens, always available) and
+``memmap`` (a flat token file, split deterministically).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+
+def _threefry_tokens(seed, step, batch, seq, vocab):
+    key = jax.random.fold_in(jax.random.PRNGKey(seed), step)
+    return jax.random.randint(key, (batch, seq + 1), 0, vocab, jnp.int32)
+
+
+def synthetic_batch(cfg, step, batch, seq, seed=0):
+    """Next-token-prediction batch: inputs/labels/mask (+frontend stub)."""
+    toks = _threefry_tokens(seed, step, batch, seq, cfg.vocab)
+    out = {"inputs": toks[:, :-1], "labels": toks[:, 1:],
+           "mask": jnp.ones((batch, seq), jnp.float32)}
+    if cfg.n_frontend_tokens:
+        key = jax.random.fold_in(jax.random.PRNGKey(seed + 1), step)
+        out["frontend"] = jax.random.normal(
+            key, (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.float32)
+    return out
+
+
+class MemmapTokens:
+    """Flat int32 token file -> deterministic batches by step index."""
+
+    def __init__(self, path, seq_len, dtype=np.int32):
+        self.data = np.memmap(path, dtype=dtype, mode="r")
+        self.seq = seq_len
+        self.n_seqs = (len(self.data) - 1) // seq_len
+
+    def batch_for_step(self, cfg, step, batch):
+        idx = (step * batch + np.arange(batch)) % self.n_seqs
+        starts = idx * self.seq
+        toks = np.stack([self.data[s:s + self.seq + 1] for s in starts])
+        toks = jnp.asarray(toks, jnp.int32)
+        return {"inputs": toks[:, :-1], "labels": toks[:, 1:],
+                "mask": jnp.ones((batch, self.seq), jnp.float32)}

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: batched radix-2 Stockham complex FFT (last axis).
+
+The 1-D FFT is the compute hot spot the paper delegates to fftw; on TPU we
+keep a (batch_tile, N) block resident in VMEM and run all log2(N) Stockham
+stages in-register -- the autosort variant needs no bit-reversal pass, so
+every stage is a pure vectorized butterfly + twiddle multiply (VPU-shaped:
+the N axis stays the 128-lane minor dimension).
+
+Complex data is (re, im) f32 pairs.  Twiddles are computed at trace time as
+constants folded into the kernel (N is static).  VMEM budget: a
+(8, 4096) block is 8 * 4096 * 2 * 4B * ~3 live buffers ~= 0.8 MB.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _stages(n):
+    k = int(np.log2(n))
+    assert 2 ** k == n, f"radix-2 kernel needs power-of-two N, got {n}"
+    return k
+
+
+def _kernel(re_ref, im_ref, out_re_ref, out_im_ref, *, n, inverse):
+    br = re_ref.shape[0]
+    xr = re_ref[...]
+    xi = im_ref[...]
+    sign = 2.0 * np.pi / n if inverse else -2.0 * np.pi / n
+    m, l = n, 1
+    while m > 1:
+        half = m // 2
+        # view as (batch, m, l)
+        xr3 = xr.reshape(br, m, l)
+        xi3 = xi.reshape(br, m, l)
+        x0r, x1r = xr3[:, :half, :], xr3[:, half:, :]
+        x0i, x1i = xi3[:, :half, :], xi3[:, half:, :]
+        # twiddles computed in-kernel (iota -> cos/sin on the VPU); n, m
+        # are static so sign*(n//m) folds to an immediate
+        ang = (jnp.arange(half, dtype=xr.dtype) *
+               xr.dtype.type(sign * (n // m)))
+        wr = jnp.cos(ang)[None, :, None]
+        wi = jnp.sin(ang)[None, :, None]
+        er, ei = x0r + x1r, x0i + x1i
+        dr, di = x0r - x1r, x0i - x1i
+        orr = dr * wr - di * wi
+        oii = dr * wi + di * wr
+        xr = jnp.concatenate([er[..., None, :], orr[..., None, :]],
+                             axis=2).reshape(br, half, 2 * l).reshape(br, n)
+        xi = jnp.concatenate([ei[..., None, :], oii[..., None, :]],
+                             axis=2).reshape(br, half, 2 * l).reshape(br, n)
+        m, l = half, 2 * l
+    if inverse:
+        xr = xr / n
+        xi = xi / n
+    out_re_ref[...] = xr
+    out_im_ref[...] = xi
+
+
+def fft_stockham(re, im, batch_block=8, inverse=False, interpret=True):
+    """re/im: (batch, N) f32 -> (re, im) of the complex FFT along axis -1."""
+    b, n = re.shape
+    _stages(n)
+    bb = min(batch_block, b)
+    grid = (pl.cdiv(b, bb),)
+    spec = pl.BlockSpec((bb, n), lambda i: (i, 0))
+    fn = pl.pallas_call(
+        partial(_kernel, n=n, inverse=inverse),
+        grid=grid,
+        in_specs=[spec, spec],
+        out_specs=[spec, spec],
+        out_shape=[jax.ShapeDtypeStruct(re.shape, re.dtype),
+                   jax.ShapeDtypeStruct(im.shape, im.dtype)],
+        interpret=interpret,
+    )
+    return fn(re, im)

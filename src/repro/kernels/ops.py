@@ -1,0 +1,64 @@
+"""Jitted public wrappers for the Pallas kernels (+ dtype plumbing).
+
+``interpret=True`` everywhere in this environment: the kernel bodies
+execute on CPU for validation; on a real TPU runtime the same calls lower
+to Mosaic with the declared BlockSpecs.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .fft_stockham import fft_stockham
+from .spectral_scale import spectral_scale
+from .twiddle_pack import twiddle_pack
+
+
+@partial(jax.jit, static_argnames=("scale", "interpret"))
+def green_multiply(fhat, green, scale: float, interpret: bool = True):
+    """Complex (or real) spectral field times real Green + norm factor."""
+    shp = fhat.shape
+    rows = 1
+    for s in shp[:-1]:
+        rows *= s
+    lanes = shp[-1]
+    g2 = green.reshape(rows, lanes).astype(jnp.float32)
+    if jnp.iscomplexobj(fhat):
+        re = fhat.real.reshape(rows, lanes).astype(jnp.float32)
+        im = fhat.imag.reshape(rows, lanes).astype(jnp.float32)
+        orr, oi = spectral_scale(re, im, g2, scale, interpret=interpret)
+        return (orr + 1j * oi).reshape(shp).astype(fhat.dtype)
+    re = fhat.reshape(rows, lanes).astype(jnp.float32)
+    orr, _ = spectral_scale(re, re, g2, scale, interpret=interpret)
+    return orr.reshape(shp).astype(fhat.dtype)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def dct2_post_twiddle(fhat_half, interpret: bool = True):
+    """DCT-II from the rfft of the symmetric extension (transforms.dct2
+    inner step): y_k = cos_k * re_k + sin_k * im_k over the first M modes."""
+    import numpy as np
+    rows, m = fhat_half.shape
+    k = jnp.arange(m)
+    cos = jnp.cos(np.pi * k / (2.0 * m)).astype(jnp.float32)
+    sin = jnp.sin(np.pi * k / (2.0 * m)).astype(jnp.float32)
+    re = fhat_half.real.astype(jnp.float32)
+    im = fhat_half.imag.astype(jnp.float32)
+    # dct2 = Re(e^{-i pi k / 2M} F_k) = cos*re + sin*im
+    return twiddle_pack(re, im, cos, sin, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("inverse", "interpret"))
+def fft1d(x, inverse: bool = False, interpret: bool = True):
+    """Batched complex FFT via the Stockham kernel. x: (..., N) complex."""
+    shp = x.shape
+    rows = 1
+    for s in shp[:-1]:
+        rows *= s
+    re = x.real.reshape(rows, shp[-1]).astype(jnp.float32)
+    im = x.imag.reshape(rows, shp[-1]).astype(jnp.float32)
+    orr, oi = fft_stockham(re, im, inverse=inverse, interpret=interpret)
+    return (orr + 1j * oi).reshape(shp).astype(
+        jnp.complex64 if x.dtype != jnp.complex128 else jnp.complex128)

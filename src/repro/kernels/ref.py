@@ -1,0 +1,39 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+
+def spectral_scale_ref(re, im, green, scale):
+    """Fused Green-function multiply + normalization (the convolution)."""
+    return re * green * scale, im * green * scale
+
+
+def twiddle_dct2_ref(re, im, cos, sin):
+    """DCT-II post-twiddle: y_k = cos_k * re_k + sin_k * im_k (rows, k)."""
+    return cos * re + sin * im
+
+
+def fft_ref(re, im):
+    """Complex FFT over the last axis."""
+    out = jnp.fft.fft(re.astype(jnp.complex64) + 1j * im.astype(jnp.complex64),
+                      axis=-1)
+    return out.real.astype(re.dtype), out.imag.astype(im.dtype)
+
+
+def stockham_fft_np(re, im):
+    """Numpy Stockham radix-2 reference (mirrors the kernel algorithm)."""
+    x = re.astype(np.complex128) + 1j * im.astype(np.complex128)
+    b, n = x.shape
+    m, l = n, 1
+    X = x.reshape(b, m, l)
+    while m > 1:
+        half = m // 2
+        x0, x1 = X[:, :half, :], X[:, half:, :]
+        w = np.exp(-2j * np.pi * np.arange(half) / m)[None, :, None]
+        even = x0 + x1
+        odd = (x0 - x1) * w
+        X = np.concatenate([even, odd], axis=2).reshape(b, half, 2 * l)
+        m, l = half, 2 * l
+    return X.reshape(b, n)

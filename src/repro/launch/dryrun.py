@@ -1,0 +1,196 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-moe-235b-a22b \
+        --shape train_4k --mesh single --comm pipelined
+
+Outputs one JSON record per cell to results/dryrun/<tag>.jsonl with
+memory_analysis, cost_analysis, collective bytes (parsed from the
+post-partitioning HLO) and the roofline terms.
+
+The XLA_FLAGS line above MUST precede any jax import: device count locks
+on first backend initialization.
+"""
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import ALL_ARCHS, arch_shapes
+from repro.core.comm import CommConfig
+from repro.launch import hlo_stats
+from repro.launch.cells import build_cell
+from repro.launch.mesh import (HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16,
+                               make_production_mesh)
+
+
+def roofline_terms(flops, bytes_acc, coll_bytes, n_chips):
+    """The three roofline times (seconds), whole-step totals."""
+    t_comp = flops / (n_chips * PEAK_FLOPS_BF16)
+    t_mem = bytes_acc / (n_chips * HBM_BW)
+    # collective bytes are summed over per-device program operands; each
+    # device drives its own links: per-chip bytes / per-chip link bw
+    t_coll = coll_bytes / ICI_BW_PER_LINK
+    return t_comp, t_mem, t_coll
+
+
+def run_cell(arch, shape_name, mesh, comm, record_hlo=False, remat=None,
+             extra_cfg=None):
+    n_chips = 1
+    for v in mesh.shape.values():
+        n_chips *= v
+    t0 = time.time()
+    cell = build_cell(arch, shape_name, mesh, comm=comm, remat=remat,
+                      extra_cfg=extra_cfg)
+    with jax.sharding.set_mesh(mesh):
+        lowered = cell.fn.lower(*cell.args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    rec = dict(cell.meta)
+    rec.update({"comm": comm.strategy, "n_chips": n_chips,
+                "t_lower_s": round(t_lower, 2),
+                "t_compile_s": round(t_compile, 2)})
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["memory"] = {
+            k: int(getattr(mem, k)) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "generated_code_size_in_bytes")
+            if hasattr(mem, k)}
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+
+    try:
+        cost = compiled.cost_analysis()
+        flops = float(cost.get("flops", 0.0))
+        bytes_acc = float(cost.get("bytes accessed", 0.0))
+        rec["cost_raw"] = {"flops": flops, "bytes_accessed": bytes_acc}
+    except Exception as e:  # pragma: no cover
+        flops = bytes_acc = 0.0
+        rec["cost_raw"] = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = hlo_stats.collective_stats(hlo)
+    rec["collectives_raw"] = coll
+    rec["op_census"] = hlo_stats.op_census(hlo)
+
+    # scan-corrected costs (XLA counts while bodies once; see flops_probe)
+    from repro.launch.flops_probe import probed_costs
+    try:
+        corr = probed_costs(arch, shape_name, mesh, comm, remat=remat,
+                            extra_cfg=extra_cfg)
+        rec["cost"] = corr
+        flops, bytes_acc = corr["flops"], corr["bytes"]
+        coll_bytes = corr["coll_bytes"]
+    except Exception as e:
+        rec["cost"] = {"probe_error": f"{type(e).__name__}: {e}"}
+        coll_bytes = coll["total_bytes"]
+
+    # cost_analysis flops on the partitioned module are per-device
+    total_flops = flops * n_chips
+    per_dev_bytes = bytes_acc
+    t_comp, t_mem, t_coll = roofline_terms(
+        total_flops, per_dev_bytes * n_chips, coll_bytes, n_chips)
+    dominant = max(("compute", t_comp), ("memory", t_mem),
+                   ("collective", t_coll), key=lambda kv: kv[1])[0]
+    mf = cell.meta.get("model_flops", 0.0)
+    rec["roofline"] = {
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "hlo_flops_total": total_flops,
+        "useful_flops_frac": (mf / total_flops) if total_flops else None,
+        "roofline_frac": (mf / (n_chips * PEAK_FLOPS_BF16)) /
+        max(t_comp, t_mem, t_coll) if total_flops else None,
+    }
+    if record_hlo:
+        rec["hlo_len"] = len(hlo)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--comm", default="a2a",
+                    choices=["a2a", "pipelined", "fused"])
+    ap.add_argument("--chunks", type=int, default=2,
+                    help="pipelined strategy granularity (paper's n_batch)")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig overrides, e.g. --set attn_block=2048")
+    args = ap.parse_args()
+
+    extra = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                v = {"true": True, "false": False}.get(v.lower(), v)
+        extra[k] = v
+
+    archs = list(ALL_ARCHS) if args.arch == "all" else args.arch.split(",")
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    comm = CommConfig(strategy=args.comm, n_chunks=args.chunks)
+    os.makedirs(args.out, exist_ok=True)
+    tag = args.tag or f"{args.arch}_{args.shape}_{args.mesh}_{args.comm}"
+    tag = tag.replace("/", "_").replace(",", "+")[:120]
+    path = os.path.join(args.out, tag + ".jsonl")
+
+    wrote = 0
+    with open(path, "a") as f:
+        for multi in meshes:
+            mesh = make_production_mesh(multi_pod=multi)
+            for arch in archs:
+                shapes = ([s.name for s in arch_shapes(arch)]
+                          or ["solve"])
+                if args.shape != "all":
+                    shapes = [s for s in shapes if s in
+                              args.shape.split(",")]
+                    if arch == "flups-poisson" and "solve" in \
+                            args.shape.split(","):
+                        shapes = ["solve"]
+                for shape_name in shapes:
+                    label = f"{arch}/{shape_name}/" \
+                        f"{'multi' if multi else 'single'}"
+                    try:
+                        rec = run_cell(arch, shape_name, mesh, comm,
+                                       remat=args.remat,
+                                       extra_cfg=extra or None)
+                        rec["status"] = "ok"
+                        rec["extra_cfg"] = extra
+                        print(f"[dryrun] OK  {label}  "
+                              f"compile={rec['t_compile_s']}s  "
+                              f"dominant={rec['roofline']['dominant']}",
+                              flush=True)
+                    except Exception as e:
+                        rec = {"arch": arch, "shape": shape_name,
+                               "mesh_multi": multi, "status": "fail",
+                               "error": f"{type(e).__name__}: {e}",
+                               "trace": traceback.format_exc()[-2000:]}
+                        print(f"[dryrun] FAIL {label}: {e}", flush=True)
+                    f.write(json.dumps(rec) + "\n")
+                    f.flush()
+                    wrote += 1
+    print(f"[dryrun] wrote {wrote} records to {path}")
+
+
+if __name__ == "__main__":
+    main()

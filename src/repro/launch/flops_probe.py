@@ -1,0 +1,88 @@
+"""Scan-corrected HLO costs.
+
+XLA's ``cost_analysis`` counts a while-loop body ONCE regardless of trip
+count (verified in tests/test_launch.py), which silently undercounts every
+scanned layer stack.  Costs are affine in layer count, so we lower small
+python-unrolled probes and extrapolate exactly:
+
+  uniform stacks:  cost(L) = c1 + (L - 1) * (c2 - c1)
+  hybrid:          cost(L) = c3 + (g - 1) * (c6 - c3) + (c5 - c3)
+                   (probes at 3, 6 and 5 layers; 5 = one group + the
+                    2-layer remainder of the 38-layer pattern)
+  enc-dec:         cost = c11 + (E-1)(c21 - c11) + (D-1)(c12 - c11)
+
+Inner (chunk) scans are unrolled in the probes (cfg.unroll_inner) so the
+SSD chunk loop is fully counted.  The same correction applies to
+bytes-accessed and to HLO-parsed collective bytes (the while body appears
+once in the HLO text too).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.configs import get_config
+from repro.core.comm import CommConfig
+from repro.launch import hlo_stats
+from repro.launch.cells import build_cell
+
+
+def _cell_costs(arch, shape_name, mesh, comm, remat, extra):
+    cell = build_cell(arch, shape_name, mesh, comm=comm, remat=remat,
+                      extra_cfg=extra)
+    with jax.sharding.set_mesh(mesh):
+        compiled = cell.fn.lower(*cell.args).compile()
+    cost = compiled.cost_analysis()
+    txt = compiled.as_text()
+    coll = hlo_stats.collective_stats(txt)
+    return {"flops": float(cost.get("flops", 0.0)) +
+            hlo_stats.fft_flops(txt),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll_bytes": float(coll["total_bytes"]),
+            "coll_count": float(coll["total_count"])}
+
+
+def _lin(c_lo, c_hi, n_lo_units, extra_units):
+    """c_lo at n_lo_units, slope from (c_hi - c_lo): add extra_units."""
+    return {k: max(c_lo[k] + extra_units * (c_hi[k] - c_lo[k]), 0.0)
+            for k in c_lo}
+
+
+def probed_costs(arch, shape_name, mesh, comm: CommConfig, remat=None,
+                 extra_cfg=None):
+    """Scan-corrected {flops, bytes, coll_bytes} per device for the cell."""
+    extra_cfg = dict(extra_cfg or {})
+    if arch == "flups-poisson":
+        # the pencil solver is python-structured: no while-loop undercount
+        return _cell_costs(arch, shape_name, mesh, comm, remat, None)
+    cfg = get_config(arch)
+    probe = dict(extra_cfg)
+    probe.update({"scan_layers": False, "unroll_inner": True})
+
+    if cfg.family == "hybrid":
+        c3 = _cell_costs(arch, shape_name, mesh, comm, remat,
+                         {**probe, "n_layers": 3})
+        c6 = _cell_costs(arch, shape_name, mesh, comm, remat,
+                         {**probe, "n_layers": 6})
+        c5 = _cell_costs(arch, shape_name, mesh, comm, remat,
+                         {**probe, "n_layers": 5})
+        g = cfg.n_layers // len(cfg.hybrid.pattern)
+        rem = cfg.n_layers - g * len(cfg.hybrid.pattern)
+        out = {k: c3[k] + (g - 1) * (c6[k] - c3[k]) for k in c3}
+        if rem:
+            out = {k: out[k] + (c5[k] - c3[k]) for k in out}
+        return {k: max(v, 0.0) for k, v in out.items()}
+    if cfg.family == "encdec":
+        c11 = _cell_costs(arch, shape_name, mesh, comm, remat,
+                          {**probe, "n_layers": 1, "n_enc_layers": 1})
+        c21 = _cell_costs(arch, shape_name, mesh, comm, remat,
+                          {**probe, "n_layers": 1, "n_enc_layers": 2})
+        c12 = _cell_costs(arch, shape_name, mesh, comm, remat,
+                          {**probe, "n_layers": 2, "n_enc_layers": 1})
+        return {k: max(c11[k] + (cfg.n_enc_layers - 1) * (c21[k] - c11[k])
+                       + (cfg.n_layers - 1) * (c12[k] - c11[k]), 0.0)
+                for k in c11}
+    c1 = _cell_costs(arch, shape_name, mesh, comm, remat,
+                     {**probe, "n_layers": 1})
+    c2 = _cell_costs(arch, shape_name, mesh, comm, remat,
+                     {**probe, "n_layers": 2})
+    return _lin(c1, c2, 1, cfg.n_layers - 1)

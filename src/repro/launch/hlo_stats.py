@@ -1,0 +1,103 @@
+"""HLO parsing: collective bytes + op census from compiled/lowered text."""
+from __future__ import annotations
+
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in an HLO module text.
+
+    Handles both ``x = f32[..] all-to-all(f32[..] %a, ...)`` (operand types
+    inline) and start/done pairs (async collectives are counted once, on
+    the -start op).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    opre = re.compile(
+        r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+        r"collective-permute)(-start|-done)?\(")
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        rhs = s.split("=", 1)[1]
+        m = opre.search(rhs)
+        if not m or m.group(2) == "-done":
+            continue                      # async pair: count the start only
+        op = m.group(1)
+        head, _, args = rhs.partition(m.group(0))
+        # prefer operand types inline (single-result text format); the
+        # operand list ends at the first ")"
+        shapes = _SHAPE_RE.findall(args.split(")", 1)[0])
+        nbytes = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        if nbytes == 0:
+            # tuple/name-only operand format: use the result type(s) before
+            # the opcode (a2a/permute preserve total bytes; gather outputs
+            # upper-bound the wire bytes)
+            shapes = _SHAPE_RE.findall(head)
+            nbytes = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        out[op]["count"] += 1
+        out[op]["bytes"] += nbytes
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    out["total_count"] = sum(v["count"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+_FFTLEN_RE = re.compile(r"fft_length=\{([0-9,]+)\}")
+
+
+def fft_flops(hlo_text: str) -> float:
+    """Analytic FLOPs of HLO fft ops (XLA cost_analysis reports ~0 for
+    them): 5 * batch * n * log2(n) per transform (complex radix-2)."""
+    import math
+    total = 0.0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if " fft(" not in s or "=" not in s:
+            continue
+        lenm = _FFTLEN_RE.search(s)
+        if not lenm:
+            continue
+        flen = 1
+        for d in lenm.group(1).split(","):
+            flen *= int(d)
+        head = s.split(" fft(", 1)[0]
+        shapes = _SHAPE_RE.findall(head)
+        if not shapes:
+            continue
+        n_elems = 1
+        for d in (shapes[-1][1].split(",") if shapes[-1][1] else []):
+            n_elems *= int(d)
+        total += 5.0 * n_elems * max(math.log2(max(flen, 2)), 1.0)
+    return total
+
+
+def op_census(hlo_text: str, ops=("fusion", "custom-call", "dot",
+                                  "convolution", "scatter", "transpose",
+                                  "copy")) -> dict:
+    counts = {}
+    for line in hlo_text.splitlines():
+        m = re.search(r"=\s+\S+\s+([a-z\-]+)\(", line.strip())
+        if m and m.group(1) in ops:
+            counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+    return counts

@@ -1,0 +1,27 @@
+"""Production mesh construction.
+
+Never touches jax device state at import time: callers create meshes via
+the functions below.  The dry-run target is a TPU v5e-class fabric:
+  single pod:  (16, 16)     -> ("data", "model"),   256 chips
+  multi  pod:  (2, 16, 16)  -> ("pod", "data", "model"), 512 chips
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(n_data=1, n_model=1):
+    """Small mesh for CPU validation runs (host devices)."""
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+# hardware constants for the roofline (TPU v5e-class, per chip)
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW_PER_LINK = 50e9       # B/s (one direction, per link)

@@ -1,0 +1,90 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Re-run the scan-corrected cost probes for existing dry-run records
+(after the HLO collective-parser fix) and write corrected records.
+
+Reuses memory_analysis / compile times from the original records; only
+cost/collectives/roofline are recomputed.
+
+    PYTHONPATH=src python -m repro.launch.reprobe \
+        --in results/dryrun/baseline_single.jsonl \
+        --out results/dryrun/zcorr_single.jsonl
+"""
+import argparse
+import json
+
+import jax
+
+from repro.core.comm import CommConfig
+from repro.launch.dryrun import roofline_terms
+from repro.launch.flops_probe import probed_costs
+from repro.launch.mesh import PEAK_FLOPS_BF16, make_production_mesh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--in", dest="inp", required=True)
+    ap.add_argument("--out", required=True)
+    ap.add_argument("--remat", default="full")
+    args = ap.parse_args()
+
+    recs = [json.loads(l) for l in open(args.inp) if l.strip()]
+    mesh_single = None
+    mesh_multi = None
+    done = set()
+    if os.path.exists(args.out):
+        for l in open(args.out):
+            r = json.loads(l)
+            done.add((r["arch"], r["shape"]))
+    with open(args.out, "a") as f:
+        for r in recs:
+            if r.get("status") != "ok" or (r["arch"], r["shape"]) in done:
+                continue
+            mesh_d = dict(r["mesh"])
+            multi = "pod" in mesh_d
+            if multi:
+                mesh_multi = mesh_multi or make_production_mesh(
+                    multi_pod=True)
+                mesh = mesh_multi
+            else:
+                mesh_single = mesh_single or make_production_mesh()
+                mesh = mesh_single
+            comm = CommConfig(strategy=r.get("comm", "a2a"))
+            try:
+                corr = probed_costs(r["arch"], r["shape"], mesh, comm,
+                                    remat=args.remat)
+            except Exception as e:
+                print(f"[reprobe] FAIL {r['arch']}/{r['shape']}: {e}",
+                      flush=True)
+                continue
+            n_chips = r["n_chips"]
+            t_comp, t_mem, t_coll = roofline_terms(
+                corr["flops"] * n_chips, corr["bytes"] * n_chips,
+                corr["coll_bytes"], n_chips)
+            mf = r.get("model_flops", 0.0)
+            total_flops = corr["flops"] * n_chips
+            dominant = max(("compute", t_comp), ("memory", t_mem),
+                           ("collective", t_coll), key=lambda kv: kv[1])[0]
+            r["cost"] = corr
+            r["roofline"] = {
+                "t_compute_s": t_comp, "t_memory_s": t_mem,
+                "t_collective_s": t_coll, "dominant": dominant,
+                "model_flops": mf,
+                "hlo_flops_total": total_flops,
+                "useful_flops_frac": (mf / total_flops) if total_flops
+                else None,
+                "roofline_frac": (mf / (n_chips * PEAK_FLOPS_BF16)) /
+                max(t_comp, t_mem, t_coll) if total_flops else None,
+            }
+            r["reprobed"] = True
+            f.write(json.dumps(r) + "\n")
+            f.flush()
+            print(f"[reprobe] OK {r['arch']}/{r['shape']} "
+                  f"{'multi' if multi else 'single'} "
+                  f"coll={corr['coll_bytes']/1e9:.1f}GB dom={dominant}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from .common import ModelConfig, MoEConfig, SSMConfig, HybridConfig
+from .transformer import init_params, forward, param_specs

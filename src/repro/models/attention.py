@@ -1,0 +1,275 @@
+"""GQA/MQA attention with RoPE, qk-norm, sliding windows, KV caches.
+
+The sequence-parallel variant routes its head/sequence transposes through
+the flups transpose engine (``repro.core.comm.topology_switch``) -- the
+paper's pencil topology switch applied to attention (Ulysses-style).
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import (ModelConfig, apply_rope, dense_init, norm_params,
+                     rms_norm, rope_freqs)
+
+NEG_INF = -2.0e38
+_LSE_MIN = -1.0e30
+
+
+def init_attn(key, cfg: ModelConfig, d_model=None):
+    d = d_model or cfg.d_model
+    dh, h, hkv = cfg.d_head, cfg.n_heads, cfg.n_kv
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (d, h, dh), cfg.pdtype(), fan_in=d),
+        "wk": dense_init(ks[1], (d, hkv, dh), cfg.pdtype(), fan_in=d),
+        "wv": dense_init(ks[2], (d, hkv, dh), cfg.pdtype(), fan_in=d),
+        "wo": dense_init(ks[3], (h, dh, d), cfg.pdtype(), fan_in=h * dh),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = norm_params(cfg, dh)
+        p["k_norm"] = norm_params(cfg, dh)
+    return p
+
+
+def _mask(cfg: ModelConfig, q_pos, k_pos, causal):
+    """(..., Sq, Sk) additive mask."""
+    m = jnp.zeros(q_pos.shape[:-1] + (q_pos.shape[-1], k_pos.shape[-1]),
+                  jnp.float32)
+    if causal:
+        m = jnp.where(k_pos[..., None, :] > q_pos[..., :, None], NEG_INF, m)
+    if cfg.window:
+        m = jnp.where(k_pos[..., None, :] <= q_pos[..., :, None] - cfg.window,
+                      NEG_INF, m)
+    return m
+
+
+def _qkv(p, cfg: ModelConfig, x, positions, rope=True):
+    cd = cfg.cdtype()
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"].astype(cd))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"]["scale"], cfg.norm_eps)
+    if rope:
+        cos, sin = rope_freqs(cfg, positions)
+        q = apply_rope(q, cos, sin, cfg.rope_fraction)
+        k = apply_rope(k, cos, sin, cfg.rope_fraction)
+    return q, k, v
+
+
+def _sdpa(cfg: ModelConfig, q, k, v, mask):
+    """q: (b,sq,h,dh), k/v: (b,sk,hkv,dh) -> (b,sq,h,dh)."""
+    b, sq, h, dh = q.shape
+    hkv = k.shape[2]
+    g = h // hkv
+    qg = q.reshape(b, sq, hkv, g, dh)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg, k).astype(jnp.float32)
+    logits = logits / np.sqrt(dh) + mask[:, None, None]
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqs,bshk->bqhgk", w, v)
+    return o.reshape(b, sq, h, dh)
+
+
+def _sdpa_chunked(cfg: ModelConfig, q, k, v, q_pos, k_pos, causal,
+                  prefix_len=0):
+    """Exact chunked attention: python loop over static q blocks, each
+    attending a static KV slice (causal upper bound / sliding window).
+
+    Peak memory is one (b, h, qb, kv_extent) logits block instead of the
+    full S x S square, and the causal triangle above each block is never
+    computed (roughly 2x fewer attention FLOPs at long S).
+    """
+    b, s, h, dh = q.shape
+    qb = min(cfg.attn_block, s)
+    n_blocks = -(-s // qb)
+    outs = []
+    for i in range(n_blocks):
+        lo, hi = i * qb, min((i + 1) * qb, s)
+        # static KV extent: causal -> [0, hi); window -> last (win + qb)
+        k_lo = 0
+        if cfg.window:
+            k_lo = max(0, hi - cfg.window - qb)
+        k_hi = hi if causal else s
+        qs = q[:, lo:hi]
+        ks = k[:, k_lo:k_hi]
+        vs = v[:, k_lo:k_hi]
+        mask = _mask(cfg, q_pos[:, lo:hi], k_pos[:, k_lo:k_hi], causal)
+        if prefix_len:
+            kp = k_pos[:, k_lo:k_hi][..., None, :]
+            mask = jnp.where(kp < prefix_len, 0.0, mask)
+        outs.append(_sdpa(cfg, qs, ks, vs, mask))
+    return jnp.concatenate(outs, axis=1)
+
+
+def attention(p, cfg: ModelConfig, x, positions, causal=True, rope=True,
+              prefix_len=0, return_kv=False):
+    """Full (training / prefill) attention. x: (B, S, D)."""
+    q, k, v = _qkv(p, cfg, x, positions, rope)
+    if cfg.attn_block and x.shape[1] > cfg.attn_block:
+        o = _sdpa_chunked(cfg, q, k, v, positions, positions, causal,
+                          prefix_len)
+    else:
+        mask = _mask(cfg, positions, positions, causal)
+        if prefix_len:
+            kp = positions[..., None, :]
+            mask = jnp.where(kp < prefix_len, 0.0, mask)
+        o = _sdpa(cfg, q, k, v, mask)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.cdtype()))
+    return (out, (k, v)) if return_kv else out
+
+
+def attention_ring(p, cfg: ModelConfig, x, mesh, causal=True, rope=True,
+                   prefix_len=0):
+    """Ring attention over the "model" mesh axis (sequence-sharded KV).
+
+    The sequence is sharded over the model axis; each rank computes its
+    queries against its local KV block, then the KV blocks rotate around
+    the ring (collective-permute), with an online-softmax accumulation.
+    This is the paper's pipelined topology switch applied to attention:
+    P-1 point-to-point steps instead of one big collective, each step's
+    compute overlapping the next block's transfer -- and the rank->rank+1
+    rotation is exactly the congestion-avoiding send ordering of
+    Appendix A.1.  Works for ANY head count (no head-divisibility
+    constraint), so it is the TP strategy for e.g. 36-head starcoder2 on a
+    16-wide model axis.
+
+    For sliding-window configs only ceil(window/S_loc)+1 ring steps carry
+    any unmasked work; the rest are statically skipped.
+    """
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+    from .common import DATA_AXES
+
+    n_ring = mesh.shape["model"]
+    dp = tuple(a for a in DATA_AXES if a in mesh.shape)
+    b, s, d = x.shape
+    s_loc = s // n_ring
+    if cfg.window:
+        n_steps = min(n_ring, -(-cfg.window // s_loc) + 1)
+    else:
+        n_steps = n_ring
+    perm = [(i, (i + 1) % n_ring) for i in range(n_ring)]
+
+    def body(xloc, wq, wk, wv, wo, qn, kn):
+        r = jax.lax.axis_index("model")
+        pos_q = r * s_loc + jnp.arange(s_loc)           # (s_loc,)
+        posb = jnp.broadcast_to(pos_q, xloc.shape[:1] + (s_loc,))
+        pp = {"wq": wq, "wk": wk, "wv": wv}
+        if cfg.qk_norm:
+            pp["q_norm"], pp["k_norm"] = qn, kn
+        q, k, v = _qkv(pp, cfg, xloc, posb, rope)
+        bl, _, h, dh = q.shape
+        hkv = k.shape[2]
+        g = h // hkv
+        qg = q.reshape(bl, s_loc, hkv, g, dh)
+
+        acc = jnp.zeros((bl, hkv, g, s_loc, dh), jnp.float32)
+        mx = jnp.full((bl, hkv, g, s_loc), -jnp.inf, jnp.float32)
+        li = jnp.zeros((bl, hkv, g, s_loc), jnp.float32)
+        kv = (k, v)
+        for t in range(n_steps):
+            owner = (r - t) % n_ring
+            pos_k = owner * s_loc + jnp.arange(s_loc)
+            kt, vt = kv
+            logits = jnp.einsum("bqhgk,bshk->bhgqs", qg,
+                                kt).astype(jnp.float32) / np.sqrt(dh)
+            mask = jnp.zeros((s_loc, s_loc), jnp.float32)
+            if causal:
+                mask = jnp.where(pos_k[None, :] > pos_q[:, None], NEG_INF,
+                                 mask)
+            if cfg.window:
+                mask = jnp.where(pos_k[None, :] <= pos_q[:, None]
+                                 - cfg.window, NEG_INF, mask)
+            if prefix_len:
+                mask = jnp.where(pos_k[None, :] < prefix_len, 0.0, mask)
+            logits = logits + mask[None, None, None]
+            bmx = jnp.maximum(mx, logits.max(axis=-1))
+            bmx_safe = jnp.maximum(bmx, _LSE_MIN)
+            scale = jnp.exp(jnp.maximum(mx, _LSE_MIN) - bmx_safe)
+            w = jnp.exp(logits - bmx_safe[..., None])
+            li = li * scale + w.sum(axis=-1)
+            acc = acc * scale[..., None] + jnp.einsum(
+                "bhgqs,bshk->bhgqk", w, vt.astype(jnp.float32))
+            mx = bmx
+            if t < n_steps - 1:
+                kv = jax.lax.ppermute(kv, "model", perm)
+        out = acc / jnp.maximum(li[..., None], 1e-30)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(bl, s_loc, h, dh)
+        return jnp.einsum("bshk,hkd->bsd", out.astype(xloc.dtype),
+                          wo.astype(cfg.cdtype()))
+
+    wspec = (P(None, None, None),) * 4
+    nspec = (P(None) if False else {"scale": P(None)}) if cfg.qk_norm \
+        else None
+    fn = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(dp, "model", None),) + wspec + (nspec, nspec),
+        out_specs=P(dp, "model", None),
+        check_vma=False)
+    return fn(x, p["wq"], p["wk"], p["wv"], p["wo"],
+              p.get("q_norm"), p.get("k_norm"))
+
+
+def attention_cross(p, cfg: ModelConfig, x, kv_cache):
+    """Cross-attention against precomputed encoder K/V (whisper decoder)."""
+    cd = cfg.cdtype()
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"].astype(cd))
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"]["scale"], cfg.norm_eps)
+    k, v = kv_cache
+    b, sq = q.shape[:2]
+    mask = jnp.zeros((b, sq, k.shape[1]), jnp.float32)
+    o = _sdpa(cfg, q, k, v, mask)
+    return jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cd))
+
+
+def encode_kv(p, cfg: ModelConfig, x_enc):
+    cd = cfg.cdtype()
+    k = jnp.einsum("bsd,dhk->bshk", x_enc, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", x_enc, p["wv"].astype(cd))
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"]["scale"], cfg.norm_eps)
+    return k, v
+
+
+# -- decode path -------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch, max_len, dtype):
+    """KV cache for one attention layer: (B, S_max, Hkv, dh) pair."""
+    shape = (batch, max_len, cfg.n_kv, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def attention_decode(p, cfg: ModelConfig, x, cache, pos):
+    """One-token decode.  x: (B, 1, D); pos: scalar int (current index).
+
+    Returns (out, new_cache).  For sliding-window configs the cache is a
+    rolling buffer of size ``cfg.window``.
+    """
+    q, k, v = _qkv(p, cfg, x, jnp.full((x.shape[0], 1), pos), rope=True)
+    s_max = cache["k"].shape[1]
+    if cfg.window and s_max == cfg.window:
+        slot = pos % cfg.window
+    else:
+        slot = pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k.astype(cache["k"].dtype),
+                                      (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v.astype(cache["v"].dtype),
+                                      (0, slot, 0, 0))
+    idx = jnp.arange(s_max)
+    if cfg.window and s_max == cfg.window:
+        # rolling buffer: entry i holds absolute position matching slot order
+        age = (slot - idx) % cfg.window
+        kpos = pos - age
+        valid = kpos >= 0
+    else:
+        kpos = idx
+        valid = idx <= pos
+    mask = jnp.where(valid, 0.0, NEG_INF)[None, None, :]
+    mask = jnp.broadcast_to(mask, (x.shape[0], 1, s_max)).astype(jnp.float32)
+    o = _sdpa(cfg, q, ck.astype(q.dtype), cv.astype(q.dtype), mask)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["wo"].astype(cfg.cdtype()))
+    return out, {"k": ck, "v": cv}

@@ -1,0 +1,241 @@
+"""Shared model components: configs, norms, rope, initializers, sharding.
+
+Everything is pure JAX (params = nested dicts of jnp arrays).  Dtypes are
+explicit throughout: ``param_dtype`` for storage (f32 master), and
+``compute_dtype`` (bf16) applied on entry to each block.
+
+Sharding is expressed as a tree of ``PartitionSpec`` parallel to the param
+tree (see ``transformer.param_specs``), using logical mesh axis names:
+``data`` axes shard the batch, ``model`` shards heads / ffn / experts /
+vocab (tensor / expert parallelism).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+DATA_AXES = ("pod", "data")  # batch shards over these when present
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    router_dtype: str = "float32"
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    head_dim: int = 64
+    chunk: int = 256
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def n_heads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.head_dim
+
+
+@dataclass(frozen=True)
+class HybridConfig:
+    """RecurrentGemma-style: pattern of (rec, rec, attn) blocks."""
+    d_rnn: int = 0               # lru width (0 -> d_model)
+    conv_width: int = 4
+    window: int = 2048           # local attention window
+    pattern: tuple = ("rec", "rec", "attn")
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                  # dense | moe | ssm | hybrid | encdec | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    act: str = "swiglu"          # swiglu | geglu | gelu | relu2
+    norm: str = "rms"            # rms | layer
+    qk_norm: bool = False
+    rope_theta: float = 1e4
+    rope_fraction: float = 1.0
+    tie_embeddings: bool = False
+    scale_embed: bool = False    # gemma-style sqrt(d) embedding scale
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    n_enc_layers: int = 0        # encoder layers (whisper)
+    n_frontend_tokens: int = 0   # stub modality tokens (audio frames/patches)
+    window: int = 0              # sliding-window attention (0 = full)
+    norm_eps: float = 1e-6
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    remat: str = "block"         # none | block | full
+    scan_layers: bool = True     # False: python-unrolled (flops probes)
+    unroll_inner: bool = False   # unroll inner (chunk) scans (flops probes)
+    attn_block: int = 0          # chunked attention q-block (0 = naive)
+    attn_ring: bool = False      # ring attention over the model axis
+    mlp_weight_gathered: bool = False  # replicate MLP over model axis and
+    # keep activations sequence-sharded (wins when S_loc*B_loc*d > |W|)
+    seq_parallel: bool = True    # sequence-shard the residual stream
+
+    @property
+    def attn_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        return self.family in ("ssm", "hybrid")
+
+    def pdtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def cdtype(self):
+        return jnp.dtype(self.compute_dtype)
+
+    def n_params(self) -> int:
+        """Approximate parameter count (reported in configs/tests)."""
+        leaves = jax.eval_shape(
+            lambda: __import__("repro.models.transformer",
+                               fromlist=["init_params"]).init_params(
+                                   jax.random.PRNGKey(0), self))
+        return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(leaves))
+
+
+# ---------------------------------------------------------------------------
+# sharding helpers
+# ---------------------------------------------------------------------------
+
+def maybe_constrain(x, *spec):
+    """with_sharding_constraint iff an abstract mesh with these axes is
+    active (set via ``jax.sharding.use_mesh`` in the launch layer); no-op in
+    single-device smoke tests."""
+    from jax.sharding import PartitionSpec as P
+    mesh = jax.sharding.get_abstract_mesh()
+    if mesh is None or not mesh.shape:
+        return x
+    names = set(mesh.axis_names)
+
+    def ok(s):
+        if s is None:
+            return True
+        if isinstance(s, (tuple, list)):
+            return all(a in names for a in s)
+        return s in names
+
+    if not all(ok(s) for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, P(*spec))
+
+
+def batch_spec(mesh_names):
+    """The data-parallel sharding tuple for the batch dimension."""
+    return tuple(a for a in DATA_AXES if a in mesh_names)
+
+
+# ---------------------------------------------------------------------------
+# primitives
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, w, eps):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def layer_norm(x, w, b, eps):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * w.astype(jnp.float32) + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def norm(cfg: ModelConfig, p, x):
+    if cfg.norm == "rms":
+        return rms_norm(x, p["scale"], cfg.norm_eps)
+    return layer_norm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+def norm_params(cfg: ModelConfig, d):
+    if cfg.norm == "rms":
+        return {"scale": jnp.zeros((d,), cfg.pdtype())}
+    return {"scale": jnp.ones((d,), cfg.pdtype()),
+            "bias": jnp.zeros((d,), cfg.pdtype())}
+
+
+def act_fn(name: str, x, gate=None):
+    if name == "swiglu":
+        return jax.nn.silu(gate) * x
+    if name == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * x
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if name == "relu2":
+        r = jax.nn.relu(x)
+        return r * r
+    raise ValueError(name)
+
+
+def is_gated(name: str) -> bool:
+    return name in ("swiglu", "geglu")
+
+
+def rope_freqs(cfg: ModelConfig, positions):
+    """positions: int array (...,) -> (cos, sin) of shape (..., rot/2)."""
+    rot = int(cfg.d_head * cfg.rope_fraction)
+    inv = 1.0 / (cfg.rope_theta ** (np.arange(0, rot, 2) / rot))
+    ang = positions[..., None].astype(jnp.float32) * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin, rope_fraction=1.0):
+    """x: (..., S, n_heads, d_head); cos/sin: (..., S, rot/2)."""
+    dh = x.shape[-1]
+    rot = cos.shape[-1] * 2
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
+    c = cos[..., None, :].swapaxes(-2, -3) if False else cos
+    # broadcast over the heads axis: x is (..., S, H, dh); cos is (..., S, r/2)
+    c = cos[..., None, :]
+    s = sin[..., None, :]
+    y1 = x1 * c - x2 * s
+    y2 = x2 * c + x1 * s
+    out = jnp.concatenate([y1, y2], axis=-1)
+    if rot < dh:
+        out = jnp.concatenate([out, xp], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(n, d):
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    ang = pos / (10000.0 ** (2 * dim / d))
+    out = np.concatenate([np.sin(ang), np.cos(ang)], axis=-1)
+    return jnp.asarray(out, dtype=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, fan_in=None):
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype):
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * 0.02).astype(dtype)

@@ -1,0 +1,145 @@
+"""Expert-parallel MoE layer with flups-style all-to-all dispatch.
+
+The token -> expert exchange is a pencil topology switch: tokens are
+sequence-sharded over the ``model`` mesh axis, experts are expert-sharded
+over the same axis, and dispatch/combine each perform exactly one
+``topology_switch`` (paper section III) scoped to that axis -- selectable
+strategy (a2a / pipelined / fused) like every other switch in the system.
+
+Dispatch is capacity-based (GShard-style, capacity_factor configurable);
+overflow drops are counted and returned as an aux metric.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.comm import CommConfig, topology_switch
+from .common import ModelConfig, dense_init, act_fn, is_gated, DATA_AXES, \
+    maybe_constrain
+
+
+def init_moe(key, cfg: ModelConfig):
+    m = cfg.moe
+    d, dff, e = cfg.d_model, cfg.d_ff, m.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], (d, e), jnp.float32, fan_in=d),
+        "w_in": dense_init(ks[1], (e, d, dff), cfg.pdtype(), fan_in=d),
+        "w_out": dense_init(ks[2], (e, dff, d), cfg.pdtype(), fan_in=dff),
+    }
+    if is_gated(cfg.act):
+        p["w_gate"] = dense_init(ks[3], (e, d, dff), cfg.pdtype(), fan_in=d)
+    return p
+
+
+def _route(p, m, xf):
+    logits = (xf.astype(jnp.float32) @ p["router"]).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, m.top_k)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    return gate, idx
+
+
+def _dispatch_local(x, idx, n_experts, capacity):
+    """Bucket local tokens into a (E, C, d) buffer.
+
+    x: (T, d); idx: (T, k) top-k expert assignments.
+    Returns buf (E, C, d) and the (dest, keep) bookkeeping for combine.
+    """
+    t, k = idx.shape
+    flat_e = idx.reshape(-1)                      # (T*k,)
+    # position of each entry within its expert's bucket
+    onehot = jax.nn.one_hot(flat_e, n_experts, dtype=jnp.int32)  # (T*k, E)
+    pos = jnp.cumsum(onehot, axis=0) - 1                          # (T*k, E)
+    slot = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+    keep = slot < capacity
+    slot_c = jnp.where(keep, slot, 0)
+    dest = flat_e * capacity + slot_c             # flat (E*C) index
+    src = jnp.repeat(jnp.arange(t), k)
+    buf = jnp.zeros((n_experts * capacity, x.shape[-1]), x.dtype)
+    buf = buf.at[dest].add(jnp.where(keep[:, None], x[src], 0.0))
+    return buf.reshape(n_experts, capacity, -1), (dest, keep)
+
+
+def _combine_local(ybuf, book, gate, t, k):
+    dest, keep = book
+    y = ybuf.reshape(-1, ybuf.shape[-1])[dest]    # (T*k, d)
+    y = jnp.where(keep[:, None], y, 0.0)
+    y = y * gate.reshape(-1)[:, None].astype(y.dtype)
+    return y.reshape(t, k, -1).sum(axis=1)
+
+
+def _expert_ffn(cfg, buf, w_in, w_gate, w_out):
+    cd = cfg.cdtype()
+    h = jnp.einsum("ecd,edf->ecf", buf, w_in.astype(cd))
+    if w_gate is not None:
+        g = jnp.einsum("ecd,edf->ecf", buf, w_gate.astype(cd))
+        h = act_fn(cfg.act, h, g)
+    else:
+        h = act_fn(cfg.act, h)
+    return jnp.einsum("ecf,efd->ecd", h, w_out.astype(cd))
+
+
+def _moe_shard(x, router, w_in, w_gate, w_out, *, cfg: ModelConfig,
+               comm: CommConfig, axes: tuple):
+    """Per-shard body (inside shard_map; experts sharded over 'model')."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    gate, idx = _route({"router": router}, m, xf)
+    capacity = int(t * m.top_k / m.n_experts * m.capacity_factor) + 1
+    buf, book = _dispatch_local(xf, idx, m.n_experts, capacity)
+
+    # flups topology switch #1: (E, C, d) -> (E_loc, C * n_shards, d)
+    buf = topology_switch(buf, "model", 0, 1, comm)
+    y = _expert_ffn(cfg, buf, w_in, w_gate, w_out)
+    # flups topology switch #2 (reverse): back to the token layout
+    y = topology_switch(y, "model", 1, 0, comm)
+
+    out = _combine_local(y, book, gate, t, m.top_k)
+    drop = jax.lax.pmean(1.0 - book[1].mean(), axes)
+    return out.reshape(b, s, d).astype(x.dtype), drop
+
+
+def moe_block(p, cfg: ModelConfig, x, comm: CommConfig, mesh=None):
+    """MoE FFN. x: (B, S, D); S is sharded over the model axis inside
+    (sequence-parallel region).  Falls back to single-shard execution when
+    no mesh is given (CPU smoke tests)."""
+    if mesh is None or "model" not in mesh.shape:
+        return _moe_local(p, cfg, x)
+    dp = tuple(a for a in DATA_AXES if a in mesh.shape)
+    axes = tuple(mesh.axis_names)
+    w_gate_spec = P("model", None, None) if "w_gate" in p else None
+    specs_in = (P(dp, "model", None), P(None, None),
+                P("model", None, None), w_gate_spec, P("model", None, None))
+    fn = jax.shard_map(
+        partial(_moe_shard, cfg=cfg, comm=comm, axes=axes),
+        mesh=mesh,
+        in_specs=specs_in,
+        out_specs=(P(dp, "model", None), P()),
+        check_vma=False,
+    )
+    return fn(x, p["router"], p["w_in"], p.get("w_gate"), p["w_out"])
+
+
+def _moe_local(p, cfg: ModelConfig, x):
+    """Single-device / decode fallback: identical math, no manual
+    collectives; expert tensors stay shardable via constraints."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    gate, idx = _route(p, m, xf)
+    capacity = int(t * m.top_k / m.n_experts * m.capacity_factor) + 1
+    buf, book = _dispatch_local(xf, idx, m.n_experts, capacity)
+    buf = maybe_constrain(buf, "model", None, None)
+    y = _expert_ffn(cfg, buf, p["w_in"], p.get("w_gate"), p["w_out"])
+    y = maybe_constrain(y, "model", None, None)
+    out = _combine_local(y, book, gate, t, m.top_k)
+    drop = 1.0 - book[1].mean()
+    return out.reshape(b, s, d).astype(x.dtype), drop

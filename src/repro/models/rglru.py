@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+    r_t = sigmoid(W_r x_t);  i_t = sigmoid(W_i x_t)
+    a_t = exp(-c * softplus(Lambda) * r_t)
+    h_t = a_t h_{t-1} + sqrt(1 - a_t^2) (i_t * x_t)
+
+computed with an associative scan over the sequence.  The block wraps the
+LRU with the Griffin recurrent-block structure: linear in (x2 branches),
+short causal conv, LRU, gated linear out.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init
+
+_C = 8.0
+
+
+def init_rglru(key, cfg: ModelConfig):
+    d = cfg.d_model
+    dr = cfg.hybrid.d_rnn or d
+    ks = jax.random.split(key, 6)
+    return {
+        "w_x": dense_init(ks[0], (d, dr), cfg.pdtype(), fan_in=d),
+        "w_y": dense_init(ks[1], (d, dr), cfg.pdtype(), fan_in=d),
+        "conv_w": dense_init(ks[2], (cfg.hybrid.conv_width, dr),
+                             cfg.pdtype(), fan_in=cfg.hybrid.conv_width),
+        "conv_b": jnp.zeros((dr,), cfg.pdtype()),
+        "w_r": dense_init(ks[3], (dr, dr), cfg.pdtype(), fan_in=dr),
+        "w_i": dense_init(ks[4], (dr, dr), cfg.pdtype(), fan_in=dr),
+        # Lambda init so a^(1/c) ~ U(0.9, 0.999) (griffin appendix)
+        "lam": jnp.asarray(
+            np.log(np.expm1(-np.log(np.linspace(0.9, 0.999, dr)))),
+            cfg.pdtype()),
+        "w_out": dense_init(ks[5], (dr, d), cfg.pdtype(), fan_in=dr),
+    }
+
+
+def _lru_coeffs(p, cfg, u):
+    """u: (B, S, dr) -> per-step decay a and input b = sqrt(1-a^2)*i*u."""
+    r = jax.nn.sigmoid(u @ p["w_r"].astype(u.dtype))
+    i = jax.nn.sigmoid(u @ p["w_i"].astype(u.dtype))
+    lam = jax.nn.softplus(p["lam"].astype(jnp.float32))
+    log_a = (-_C * lam) * r.astype(jnp.float32)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) \
+        * (i * u).astype(jnp.float32)
+    return a, b
+
+
+def _conv(u, w, b, width):
+    pad = jnp.pad(u, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + u.shape[1], :] * w[i] for i in range(width))
+    return out + b
+
+
+def rglru_block(p, cfg: ModelConfig, x, return_tail=False):
+    """x: (B, S, D) -> (out, final_state (B, dr), conv_tail)."""
+    cd = cfg.cdtype()
+    u_raw = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(cd))
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_y"].astype(cd)),
+                       approximate=True)
+    conv_tail = (u_raw[:, -(cfg.hybrid.conv_width - 1):, :]
+                 if return_tail else None)
+    u = _conv(u_raw, p["conv_w"].astype(cd), p["conv_b"].astype(cd),
+              cfg.hybrid.conv_width)
+    a, bb = _lru_coeffs(p, cfg, u)
+
+    # associative scan: (a2, b2) o (a1, b1) = (a1*a2, a2*b1 + b2)
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    aa, hh = jax.lax.associative_scan(combine, (a, bb), axis=1)
+    h = hh.astype(cd)
+    out = jnp.einsum("bse,ed->bsd", h * gate, p["w_out"].astype(cd))
+    return out, hh[:, -1].astype(jnp.float32), conv_tail
+
+
+def init_rglru_cache(cfg: ModelConfig, batch, dtype):
+    dr = cfg.hybrid.d_rnn or cfg.d_model
+    return {
+        "conv": jnp.zeros((batch, cfg.hybrid.conv_width - 1, dr), dtype),
+        "state": jnp.zeros((batch, dr), jnp.float32),
+    }
+
+
+def rglru_decode(p, cfg: ModelConfig, x, cache):
+    """One token. x: (B, 1, D)."""
+    cd = cfg.cdtype()
+    u = jnp.einsum("bsd,de->bse", x, p["w_x"].astype(cd))
+    gate = jax.nn.gelu(jnp.einsum("bsd,de->bse", x, p["w_y"].astype(cd)),
+                       approximate=True)
+    hist = jnp.concatenate([cache["conv"], u], axis=1)
+    w = p["conv_w"].astype(cd)
+    conv = sum(hist[:, i, :] * w[i] for i in range(cfg.hybrid.conv_width))
+    u1 = (conv + p["conv_b"].astype(cd))[:, None, :]
+    a, bb = _lru_coeffs(p, cfg, u1)
+    h = cache["state"] * a[:, 0] + bb[:, 0]
+    out = jnp.einsum("be,ed->bd", h.astype(cd) * gate[:, 0],
+                     p["w_out"].astype(cd))[:, None, :]
+    return out, {"conv": hist[:, 1:], "state": h}

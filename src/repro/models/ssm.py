@@ -1,0 +1,177 @@
+"""Mamba-2 (SSD, state-space duality) block, chunked scan + O(1) decode.
+
+The SSD form (Dao & Gu 2024): per head, scalar-decay SSM
+    h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t,   y_t = C_t^T h_t + D x_t
+computed chunk-parallel: quadratic attention-like term inside chunks of
+length ``chunk`` + a sequential (scan) state pass between chunks.  The
+inter-chunk pass is the paper-analogue of the pipelined topology switch:
+chunk k's intra work overlaps chunk k+1's state dependency.
+
+Decode carries (conv_state, ssm_state) and costs O(1) per token.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from .common import ModelConfig, dense_init, norm_params, rms_norm
+
+
+def init_ssm(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    din = s.d_inner(d)
+    nh = s.n_heads(d)
+    ks = jax.random.split(key, 6)
+    conv_dim = din + 2 * s.d_state
+    p = {
+        # fused input projection: [z (gate), x, B, C, dt]
+        "w_in": dense_init(ks[0], (d, 2 * din + 2 * s.d_state + nh),
+                           cfg.pdtype(), fan_in=d),
+        "conv_w": dense_init(ks[1], (s.d_conv, conv_dim), cfg.pdtype(),
+                             fan_in=s.d_conv),
+        "conv_b": jnp.zeros((conv_dim,), cfg.pdtype()),
+        "a_log": jnp.log(jnp.linspace(1.0, float(nh), nh)).astype(
+            cfg.pdtype()),
+        "dt_bias": jnp.asarray(
+            np.log(np.expm1(np.linspace(1e-3, 0.1, nh))), cfg.pdtype()),
+        "d_skip": jnp.ones((nh,), cfg.pdtype()),
+        "out_norm": norm_params(cfg, din),
+        "w_out": dense_init(ks[2], (din, d), cfg.pdtype(), fan_in=din),
+    }
+    return p
+
+
+def _split_proj(cfg, proj):
+    s = cfg.ssm
+    din = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    z, xbc_dt = jnp.split(proj, [din], axis=-1)
+    xbc, dt = jnp.split(xbc_dt, [din + 2 * s.d_state], axis=-1)
+    return z, xbc, dt
+
+
+def _conv1d(xbc, w, b, d_conv):
+    """Causal depthwise conv along the sequence. xbc: (B, S, C)."""
+    pad = jnp.pad(xbc, ((0, 0), (d_conv - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] * w[i] for i in range(d_conv))
+    return jax.nn.silu(out + b)
+
+
+def ssd_chunked(xh, dt, a, B, C, chunk, unroll=False):
+    """SSD scan.  xh: (b, s, h, p); dt: (b, s, h); B,C: (b, s, n).
+
+    One ``lax.scan`` over chunks: each step does the quadratic intra-chunk
+    work AND consumes/produces the inter-chunk state, so peak memory is one
+    chunk's (q, k, h) block and the state dependency is the only sequential
+    edge (the schedule the paper's ``nb`` strategy exposes to MPI).
+
+    Returns y (b, s, h, p) and the final state (b, h, p, n).
+    """
+    b, s, h, pdim = xh.shape
+    n = B.shape[-1]
+    nc = s // chunk
+    la = dt * a                                      # log-decay per step < 0
+    causal = jnp.tril(jnp.ones((chunk, chunk), bool))
+
+    def step(h_in, inp):
+        xc, dtc, lac, Bc, Cc = inp                   # (b,c,...) one chunk
+        seg = jnp.cumsum(lac, axis=1)                # (b,c,h)
+        decay = seg[:, :, None, :] - seg[:, None, :, :]      # (b,q,k,h)
+        w = jnp.where(causal[None, :, :, None], jnp.exp(decay), 0.0)
+        scores = jnp.einsum("bqn,bkn->bqk", Cc, Bc)
+        y = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, w * dtc[:, None], xc)
+        # contribution of the incoming state
+        y = y + jnp.einsum("bqn,bqh,bhpn->bqhp", Cc, jnp.exp(seg), h_in)
+        # outgoing state
+        tail = seg[:, -1:, :] - seg
+        out_state = jnp.einsum("bkh,bkn,bkhp->bhpn",
+                               jnp.exp(tail) * dtc, Bc, xc)
+        h_out = h_in * jnp.exp(seg[:, -1])[..., None, None] + out_state
+        return h_out, y
+
+    def rs(v):  # (b, s, ...) -> (nc, b, chunk, ...)
+        return v.reshape((b, nc, chunk) + v.shape[2:]).swapaxes(0, 1)
+
+    init = jnp.zeros((b, h, pdim, n), xh.dtype)
+    final, ys = jax.lax.scan(
+        step, init, (rs(xh), rs(dt), rs(la), rs(B), rs(C)),
+        unroll=nc if unroll else 1)
+    y = ys.swapaxes(0, 1).reshape(b, s, h, pdim)
+    return y, final
+
+
+def ssm_block(p, cfg: ModelConfig, x, return_tail=False):
+    """Training / prefill forward. x: (B, S, D).
+
+    Returns (out, final_state, conv_tail); conv_tail is the raw xbc history
+    needed to continue decoding (None unless ``return_tail``)."""
+    s = cfg.ssm
+    cd = cfg.cdtype()
+    din = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(cd))
+    z, xbc_raw, dt = _split_proj(cfg, proj)
+    xbc = xbc_raw
+    conv_tail = xbc_raw[:, -(s.d_conv - 1):, :] if return_tail else None
+    xbc = _conv1d(xbc, p["conv_w"].astype(cd), p["conv_b"].astype(cd),
+                  s.d_conv)
+    xs, B, C = jnp.split(xbc, [din, din + s.d_state], axis=-1)
+    bsz, slen = x.shape[:2]
+    xh = xs.reshape(bsz, slen, nh, s.head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, state = ssd_chunked(xh.astype(jnp.float32), dt, a,
+                           B.astype(jnp.float32), C.astype(jnp.float32),
+                           min(s.chunk, slen), unroll=cfg.unroll_inner)
+    y = y + xh.astype(jnp.float32) * p["d_skip"].astype(jnp.float32)[
+        None, None, :, None]
+    y = y.reshape(bsz, slen, din).astype(cd)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"]["scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cd))
+    return out, state, conv_tail
+
+
+# -- decode -------------------------------------------------------------------
+
+def init_ssm_cache(cfg: ModelConfig, batch, dtype):
+    s = cfg.ssm
+    din = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    conv_dim = din + 2 * s.d_state
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, conv_dim), dtype),
+        "state": jnp.zeros((batch, nh, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(p, cfg: ModelConfig, x, cache):
+    """One token. x: (B, 1, D)."""
+    s = cfg.ssm
+    cd = cfg.cdtype()
+    din = s.d_inner(cfg.d_model)
+    nh = s.n_heads(cfg.d_model)
+    proj = jnp.einsum("bsd,de->bse", x, p["w_in"].astype(cd))
+    z, xbc, dt = _split_proj(cfg, proj)
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)   # (B, d_conv, C)
+    w = p["conv_w"].astype(cd)
+    conv = sum(hist[:, i, :] * w[i] for i in range(s.d_conv))
+    xbc1 = jax.nn.silu(conv + p["conv_b"].astype(cd))[:, None, :]
+    xs, B, C = jnp.split(xbc1, [din, din + s.d_state], axis=-1)
+    xh = xs.reshape(-1, nh, s.head_dim).astype(jnp.float32)
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) +
+                          p["dt_bias"].astype(jnp.float32))     # (B, h)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    dec = jnp.exp(dtv * a)                                       # (B, h)
+    Bv = B[:, 0].astype(jnp.float32)                             # (B, n)
+    Cv = C[:, 0].astype(jnp.float32)
+    st = cache["state"] * dec[..., None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dtv, Bv, xh)
+    y = jnp.einsum("bn,bhpn->bhp", Cv, st)
+    y = y + xh * p["d_skip"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(-1, 1, din).astype(cd)
+    y = rms_norm(y * jax.nn.silu(z), p["out_norm"]["scale"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"].astype(cd))
+    return out, {"conv": hist[:, 1:, :], "state": st}

@@ -1,0 +1,668 @@
+"""Model assembly for all assigned architectures.
+
+One parameter tree + three entry points per architecture family:
+
+  * ``forward``      -- training / scoring (full sequence, causal or prefix)
+  * ``prefill``      -- forward + build decode caches (serving, prompt pass)
+  * ``decode_step``  -- one token with caches (serving, autoregressive)
+
+Uniform stacks are ``lax.scan``-ned over stacked layer params (compact HLO,
+fast compiles at 94 layers); the hybrid (RecurrentGemma) stack scans over
+its (rec, rec, attn) pattern groups.  ``param_specs`` produces the
+PartitionSpec tree (TP/EP over "model", DP over "pod"/"data").
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.comm import CommConfig
+from . import attention as attn
+from . import moe as moe_mod
+from . import rglru as rglru_mod
+from . import ssm as ssm_mod
+from .common import (ModelConfig, dense_init, embed_init, norm, norm_params,
+                     act_fn, is_gated, maybe_constrain, sinusoidal_positions)
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _mesh_axis(mesh, name):
+    try:
+        return mesh.shape[name] if mesh is not None else 1
+    except Exception:
+        return 1
+
+
+def _init_mlp(key, cfg: ModelConfig, d=None, dff=None):
+    d = d or cfg.d_model
+    dff = dff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_in": dense_init(ks[0], (d, dff), cfg.pdtype(), fan_in=d),
+         "w_out": dense_init(ks[1], (dff, d), cfg.pdtype(), fan_in=dff)}
+    if is_gated(cfg.act):
+        p["w_gate"] = dense_init(ks[2], (d, dff), cfg.pdtype(), fan_in=d)
+    return p
+
+
+def _init_block(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    if kind == "ssm":
+        return {"ln1": norm_params(cfg, cfg.d_model),
+                "ssm": ssm_mod.init_ssm(ks[0], cfg)}
+    if kind == "rec":
+        return {"ln1": norm_params(cfg, cfg.d_model),
+                "rec": rglru_mod.init_rglru(ks[0], cfg),
+                "ln2": norm_params(cfg, cfg.d_model),
+                "mlp": _init_mlp(ks[1], cfg)}
+    if kind == "moe":
+        return {"ln1": norm_params(cfg, cfg.d_model),
+                "attn": attn.init_attn(ks[0], cfg),
+                "ln2": norm_params(cfg, cfg.d_model),
+                "moe": moe_mod.init_moe(ks[1], cfg)}
+    if kind == "cross":  # whisper decoder block
+        return {"ln1": norm_params(cfg, cfg.d_model),
+                "attn": attn.init_attn(ks[0], cfg),
+                "lnx": norm_params(cfg, cfg.d_model),
+                "xattn": attn.init_attn(ks[1], cfg),
+                "ln2": norm_params(cfg, cfg.d_model),
+                "mlp": _init_mlp(ks[2], cfg)}
+    # dense attention block
+    return {"ln1": norm_params(cfg, cfg.d_model),
+            "attn": attn.init_attn(ks[0], cfg),
+            "ln2": norm_params(cfg, cfg.d_model),
+            "mlp": _init_mlp(ks[1], cfg)}
+
+
+def _stack_init(key, cfg, kind, n):
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_block(k, cfg, kind))(keys)
+
+
+def _hybrid_layout(cfg: ModelConfig):
+    """(n_groups, remainder_kinds) for the hybrid pattern."""
+    pat = cfg.hybrid.pattern
+    n_groups = cfg.n_layers // len(pat)
+    rem = cfg.n_layers - n_groups * len(pat)
+    return n_groups, tuple(pat[:rem])
+
+
+def init_params(key, cfg: ModelConfig):
+    k_embed, k_stack, k_out, k_enc = jax.random.split(key, 4)
+    p = {"embed": embed_init(k_embed, (cfg.vocab, cfg.d_model),
+                             cfg.pdtype()),
+         "ln_f": norm_params(cfg, cfg.d_model)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k_out, (cfg.d_model, cfg.vocab),
+                                  cfg.pdtype(), fan_in=cfg.d_model)
+    if cfg.family == "ssm":
+        p["layers"] = _stack_init(k_stack, cfg, "ssm", cfg.n_layers)
+    elif cfg.family == "moe":
+        p["layers"] = _stack_init(k_stack, cfg, "moe", cfg.n_layers)
+    elif cfg.family == "hybrid":
+        n_groups, rem = _hybrid_layout(cfg)
+        pat = cfg.hybrid.pattern
+        p["groups"] = {
+            kind + str(i): _stack_init(jax.random.fold_in(k_stack, i), cfg,
+                                       kind, n_groups)
+            for i, kind in enumerate(pat)}
+        p["rem"] = {kind + str(i): _init_block(
+            jax.random.fold_in(k_stack, 100 + i), cfg, kind)
+            for i, kind in enumerate(rem)}
+    elif cfg.family == "encdec":
+        p["enc"] = _stack_init(k_enc, cfg, "dense", cfg.n_enc_layers)
+        p["ln_enc"] = norm_params(cfg, cfg.d_model)
+        p["layers"] = _stack_init(k_stack, cfg, "cross", cfg.n_layers)
+    else:  # dense / vlm
+        p["layers"] = _stack_init(k_stack, cfg, "dense", cfg.n_layers)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# blocks (forward)
+# ---------------------------------------------------------------------------
+
+def _mlp(p, cfg, x):
+    cd = cfg.cdtype()
+    h = jnp.einsum("bsd,df->bsf", x, p["w_in"].astype(cd))
+    if is_gated(cfg.act):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"].astype(cd))
+        h = act_fn(cfg.act, h, g)
+    else:
+        h = act_fn(cfg.act, h)
+    if cfg.mlp_weight_gathered:
+        # keep everything sequence-sharded; the (gathered) weights are the
+        # only model-axis traffic
+        h = maybe_constrain(h, ("pod", "data"), "model", None)
+    else:
+        h = maybe_constrain(h, None, None, "model")
+    return jnp.einsum("bsf,fd->bsd", h, p["w_out"].astype(cd))
+
+
+def _self_attention(p, cfg, x, positions, causal, prefix_len, rope,
+                    return_kv=False):
+    out = attn.attention(p, cfg, x, positions, causal=causal, rope=rope,
+                         prefix_len=prefix_len, return_kv=return_kv)
+    return out if return_kv else (out, None)
+
+
+def _block_fwd(p, cfg: ModelConfig, kind, x, positions, comm, mesh,
+               causal=True, prefix_len=0, x_enc=None, rope=True,
+               collect=False):
+    """Returns (x, aux, cache_or_None)."""
+    # sequence-parallel residual stream at the block boundary: saved (remat)
+    # activations are sharded over the model axis too, not just data
+    if cfg.seq_parallel and x.shape[1] % max(1, _mesh_axis(mesh, "model")) == 0:
+        x = maybe_constrain(x, ("pod", "data"), "model", None)
+    aux = jnp.float32(0.0)
+    cache = None
+    if kind == "ssm":
+        h, state, conv_tail = ssm_mod.ssm_block(
+            p["ssm"], cfg, norm(cfg, p["ln1"], x), return_tail=collect)
+        if collect:
+            cache = {"state": state, "conv": conv_tail}
+        return x + h, aux, cache
+    if kind == "rec":
+        h, state, conv_tail = rglru_mod.rglru_block(
+            p["rec"], cfg, norm(cfg, p["ln1"], x), return_tail=collect)
+        if collect:
+            cache = {"state": state, "conv": conv_tail}
+        x = x + h
+        return x + _mlp(p["mlp"], cfg, norm(cfg, p["ln2"], x)), aux, cache
+    use_ring = (cfg.attn_ring and not collect and mesh is not None
+                and "model" in getattr(mesh, "shape", {})
+                and x.shape[1] % mesh.shape["model"] == 0)
+    if use_ring:
+        a, kv = attn.attention_ring(
+            p["attn"], cfg, norm(cfg, p["ln1"], x), mesh, causal=causal,
+            rope=rope, prefix_len=prefix_len), None
+    else:
+        a, kv = _self_attention(p["attn"], cfg, norm(cfg, p["ln1"], x),
+                                positions, causal, prefix_len, rope,
+                                return_kv=collect)
+    if collect:
+        cache = {"sa": {"k": kv[0], "v": kv[1]}}
+    x = x + a
+    if kind == "cross":
+        kv_x = attn.encode_kv(p["xattn"], cfg, x_enc)
+        x = x + attn.attention_cross(p["xattn"], cfg,
+                                     norm(cfg, p["lnx"], x), kv_x)
+        if collect:
+            cache["xk"], cache["xv"] = kv_x
+    if kind == "moe":
+        x = maybe_constrain(x, ("pod", "data"), "model", None)
+        h, aux = moe_mod.moe_block(p["moe"], cfg, norm(cfg, p["ln2"], x),
+                                   comm, mesh)
+        aux = jnp.float32(aux)
+        x = x + h
+        x = maybe_constrain(x, ("pod", "data"), None, None)
+    else:
+        x = x + _mlp(p["mlp"], cfg, norm(cfg, p["ln2"], x))
+    return x, aux, cache
+
+
+def _maybe_remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    policy = (jax.checkpoint_policies.nothing_saveable if cfg.remat == "full"
+              else jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn, policy=policy)
+
+
+def _run_stack(params, cfg, kind, x, positions, comm, mesh, causal=True,
+               prefix_len=0, x_enc=None, rope=True, collect=False):
+    fwd = partial(_block_fwd, cfg=cfg, kind=kind, positions=positions,
+                  comm=comm, mesh=mesh, causal=causal,
+                  prefix_len=prefix_len, x_enc=x_enc, rope=rope,
+                  collect=collect)
+    inner = _maybe_remat(cfg, lambda lp, xx: fwd(lp, x=xx))
+
+    def body(xx, lp):
+        y, aux, cache = inner(lp, xx)
+        return y, (aux, cache)
+
+    if cfg.scan_layers:
+        x, (auxs, caches) = jax.lax.scan(body, x, params)
+        return x, jnp.mean(auxs), caches
+    auxs, caches = [], []
+    n = jax.tree.leaves(params)[0].shape[0]
+    for i in range(n):
+        lp = jax.tree.map(lambda a: a[i], params)
+        x, (a, c) = body(x, lp)
+        auxs.append(a)
+        caches.append(c)
+    caches = (jax.tree.map(lambda *cs: jnp.stack(cs), *caches)
+              if collect else None)
+    return x, jnp.mean(jnp.stack(auxs)), caches
+
+
+# ---------------------------------------------------------------------------
+# top level
+# ---------------------------------------------------------------------------
+
+def _embed_in(params, cfg, tokens, frontend):
+    cd = cfg.cdtype()
+    x = params["embed"][tokens].astype(cd)
+    if cfg.scale_embed:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(cd)
+    prefix_len = 0
+    if frontend is not None and cfg.family != "encdec":
+        x = jnp.concatenate([frontend.astype(cd), x], axis=1)
+        prefix_len = frontend.shape[1]
+    return x, prefix_len
+
+
+def _logits(params, cfg, x):
+    x = norm(cfg, params["ln_f"], x)
+    if cfg.tie_embeddings:
+        w = params["embed"].astype(cfg.cdtype())
+        out = jnp.einsum("bsd,vd->bsv", x, w)
+    else:
+        out = jnp.einsum("bsd,dv->bsv", x, params["lm_head"].astype(
+            cfg.cdtype()))
+    return out.astype(jnp.float32)
+
+
+def _encode(params, cfg, frontend):
+    """Whisper encoder over stubbed frame embeddings (non-causal)."""
+    cd = cfg.cdtype()
+    x = frontend.astype(cd)
+    pos = sinusoidal_positions(x.shape[1], cfg.d_model).astype(cd)
+    x = x + pos[None]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    x, _, _ = _run_stack(params["enc"], cfg, "dense", x, positions,
+                         CommConfig(), None, causal=False, rope=False)
+    return norm(cfg, params["ln_enc"], x)
+
+
+def _forward_impl(params, cfg: ModelConfig, tokens, frontend, comm, mesh,
+                  collect):
+    x, prefix_len = _embed_in(params, cfg, tokens, frontend)
+    x = maybe_constrain(x, ("pod", "data"), None, None)
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+    caches = None
+    if cfg.family == "hybrid":
+        n_groups, rem = _hybrid_layout(cfg)
+        pat = cfg.hybrid.pattern
+        gparams = tuple(params["groups"][k + str(i)]
+                        for i, k in enumerate(pat))
+
+        def gbody(xx, lps):
+            a = jnp.float32(0.0)
+            cs = []
+            for kind, lp in zip(pat, lps):
+                xx, ai, c = _block_fwd(lp, cfg, kind, xx, positions, comm,
+                                       mesh, collect=collect)
+                a, cs = a + ai, cs + [c]
+            return xx, (a, tuple(cs))
+
+        if cfg.scan_layers:
+            x, (auxs, gcaches) = jax.lax.scan(gbody, x, gparams)
+            aux = jnp.mean(auxs)
+        else:
+            n_g = jax.tree.leaves(gparams)[0].shape[0]
+            auxs, gc = [], []
+            for i in range(n_g):
+                lp = jax.tree.map(lambda a: a[i], gparams)
+                x, (a, c) = gbody(x, lp)
+                auxs.append(a)
+                gc.append(c)
+            aux = jnp.mean(jnp.stack(auxs))
+            gcaches = (jax.tree.map(lambda *cs: jnp.stack(cs), *gc)
+                       if collect else None)
+        rem_caches = {}
+        for i, kind in enumerate(rem):
+            x, _, c = _block_fwd(params["rem"][kind + str(i)], cfg, kind, x,
+                                 positions, comm, mesh, collect=collect)
+            rem_caches[kind + str(i)] = c
+        if collect:
+            caches = {"groups": {k + str(i): gcaches[i]
+                                 for i, k in enumerate(pat)},
+                      "rem": rem_caches}
+    elif cfg.family == "encdec":
+        x_enc = _encode(params, cfg, frontend)
+        pos_dec = sinusoidal_positions(
+            tokens.shape[1], cfg.d_model).astype(cfg.cdtype())
+        x = x + pos_dec[None]
+        x, aux, caches = _run_stack(params["layers"], cfg, "cross", x,
+                                    positions, comm, mesh, x_enc=x_enc,
+                                    rope=False, collect=collect)
+    else:
+        kind = {"ssm": "ssm", "moe": "moe"}.get(cfg.family, "dense")
+        x, aux, caches = _run_stack(params["layers"], cfg, kind, x,
+                                    positions, comm, mesh,
+                                    prefix_len=prefix_len, collect=collect)
+        if collect:
+            caches = {"layers": caches}
+    logits = _logits(params, cfg, x)
+    return logits, {"moe_drop": aux}, caches
+
+
+def forward(params, cfg: ModelConfig, tokens, frontend=None,
+            comm: CommConfig = CommConfig(), mesh=None):
+    """Training/scoring forward.  tokens: (B, S) int32.
+    Returns (logits (B, S_total, V) f32, aux dict)."""
+    logits, aux, _ = _forward_impl(params, cfg, tokens, frontend, comm,
+                                   mesh, collect=False)
+    return logits, aux
+
+
+def prefill(params, cfg: ModelConfig, tokens, frontend=None,
+            comm: CommConfig = CommConfig(), mesh=None, max_len=None):
+    """Prompt pass: logits + decode caches sized ``max_len``."""
+    logits, aux, caches = _forward_impl(params, cfg, tokens, frontend, comm,
+                                        mesh, collect=True)
+    s = logits.shape[1]
+    max_len = max_len or s
+    caches = _finalize_caches(cfg, caches, s, max_len)
+    return logits, caches
+
+
+def _finalize_caches(cfg, caches, s, max_len):
+    """Pad / roll collected prefill caches into decode layout."""
+    win = min(cfg.window, max_len) if cfg.window else max_len
+
+    def fix(tree):
+        def leaf(path, a):
+            name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+            return a
+        return tree
+
+    def fix_kv(kv):
+        # kv: (..., B, S, hkv, dh) (leading layer-stack dims possible)
+        k = kv["k"]
+        if cfg.window and s > win:
+            idx = (jnp.arange(s - win, s) % win)
+            buf_shape = k.shape[:-3] + (win,) + k.shape[-2:]
+            out = {}
+            for key in ("k", "v"):
+                buf = jnp.zeros(buf_shape, kv[key].dtype)
+                out[key] = buf.at[..., idx, :, :].set(
+                    kv[key][..., s - win:, :, :])
+            return out
+        pad = [(0, 0)] * k.ndim
+        pad[-3] = (0, max_len - s)
+        return {key: jnp.pad(kv[key], pad) for key in ("k", "v")}
+
+    def walk(t):
+        if isinstance(t, dict) and set(t) == {"k", "v"}:
+            return fix_kv(t)
+        if isinstance(t, dict):
+            return {kk: walk(vv) for kk, vv in t.items()}
+        if isinstance(t, tuple):
+            return tuple(walk(vv) for vv in t)
+        return t
+
+    return walk(caches)
+
+
+# ---------------------------------------------------------------------------
+# serving: decode
+# ---------------------------------------------------------------------------
+
+def _block_decode(p, cfg, kind, x, cache, pos, rope=True):
+    if kind == "ssm":
+        h, cache = ssm_mod.ssm_decode(p["ssm"], cfg,
+                                      norm(cfg, p["ln1"], x), cache)
+        return x + h, cache
+    if kind == "rec":
+        h, cache = rglru_mod.rglru_decode(p["rec"], cfg,
+                                          norm(cfg, p["ln1"], x), cache)
+        x = x + h
+        return x + _mlp(p["mlp"], cfg, norm(cfg, p["ln2"], x)), cache
+    a, cache_sa = attn.attention_decode(p["attn"], cfg,
+                                        norm(cfg, p["ln1"], x),
+                                        cache["sa"], pos)
+    x = x + a
+    new_cache = {"sa": cache_sa}
+    if kind == "cross":
+        x = x + attn.attention_cross(p["xattn"], cfg,
+                                     norm(cfg, p["lnx"], x),
+                                     (cache["xk"], cache["xv"]))
+        new_cache["xk"], new_cache["xv"] = cache["xk"], cache["xv"]
+    if kind == "moe":
+        h, _ = moe_mod._moe_local(p["moe"], cfg, norm(cfg, p["ln2"], x))
+        x = x + h
+    else:
+        x = x + _mlp(p["mlp"], cfg, norm(cfg, p["ln2"], x))
+    return x, new_cache
+
+
+def init_caches(cfg: ModelConfig, batch, max_len):
+    """Zero decode caches, stacked to match the scanned stacks."""
+    cd = cfg.cdtype()
+    win = min(cfg.window, max_len) if cfg.window else max_len
+
+    def attn_cache():
+        return {"sa": attn.init_cache(cfg, batch, win, cd)}
+
+    def rep(tree, n):
+        return jax.tree.map(lambda a: jnp.zeros((n,) + a.shape, a.dtype),
+                            tree)
+
+    if cfg.family == "ssm":
+        return {"layers": rep(ssm_mod.init_ssm_cache(cfg, batch, cd),
+                              cfg.n_layers)}
+    if cfg.family == "hybrid":
+        n_groups, rem = _hybrid_layout(cfg)
+        pat = cfg.hybrid.pattern
+        out = {"groups": {}, "rem": {}}
+        for i, kind in enumerate(pat):
+            base = (rglru_mod.init_rglru_cache(cfg, batch, cd)
+                    if kind == "rec" else attn_cache())
+            out["groups"][kind + str(i)] = rep(base, n_groups)
+        for i, kind in enumerate(rem):
+            out["rem"][kind + str(i)] = (
+                rglru_mod.init_rglru_cache(cfg, batch, cd)
+                if kind == "rec" else attn_cache())
+        return out
+    if cfg.family == "encdec":
+        c = attn_cache()
+        enc_len = cfg.n_frontend_tokens
+        c["xk"] = jnp.zeros((batch, enc_len, cfg.n_kv, cfg.d_head), cd)
+        c["xv"] = jnp.zeros((batch, enc_len, cfg.n_kv, cfg.d_head), cd)
+        return {"layers": rep(c, cfg.n_layers)}
+    return {"layers": rep(attn_cache(), cfg.n_layers)}
+
+
+def decode_step(params, cfg: ModelConfig, token, caches, pos,
+                comm: CommConfig = CommConfig(), mesh=None):
+    """One serving step.  token: (B, 1) int32; pos: scalar int32 (0-based
+    index of this token).  Returns (logits (B, 1, V), new caches)."""
+    cd = cfg.cdtype()
+    x = params["embed"][token].astype(cd)
+    if cfg.scale_embed:
+        x = x * jnp.sqrt(float(cfg.d_model)).astype(cd)
+    if cfg.family == "encdec":
+        pe = sinusoidal_positions(2 ** 15, cfg.d_model).astype(cd)
+        x = x + jax.lax.dynamic_slice_in_dim(pe, pos, 1, axis=0)[None]
+
+    if cfg.family == "hybrid":
+        n_groups, rem = _hybrid_layout(cfg)
+        pat = cfg.hybrid.pattern
+
+        def gbody(xx, lps_caches):
+            lps, cs = lps_caches
+            new_cs = []
+            for kind, lp, c in zip(pat, lps, cs):
+                xx, nc = _block_decode(lp, cfg, kind, xx, c, pos)
+                new_cs.append(nc)
+            return xx, tuple(new_cs)
+
+        gparams = tuple(params["groups"][k + str(i)]
+                        for i, k in enumerate(pat))
+        gcaches = tuple(caches["groups"][k + str(i)]
+                        for i, k in enumerate(pat))
+        if cfg.scan_layers:
+            x, ncs = jax.lax.scan(gbody, x, (gparams, gcaches))
+        else:
+            n_g = jax.tree.leaves(gparams)[0].shape[0]
+            accs = []
+            for i in range(n_g):
+                lp = jax.tree.map(lambda a: a[i], gparams)
+                cc = jax.tree.map(lambda a: a[i], gcaches)
+                x, nc = gbody(x, (lp, cc))
+                accs.append(nc)
+            ncs = jax.tree.map(lambda *cs: jnp.stack(cs), *accs)
+        new_caches = {"groups": {k + str(i): ncs[i]
+                                 for i, k in enumerate(pat)}, "rem": {}}
+        for i, k in enumerate(rem):
+            x, nc = _block_decode(params["rem"][k + str(i)], cfg, k, x,
+                                  caches["rem"][k + str(i)], pos)
+            new_caches["rem"][k + str(i)] = nc
+    else:
+        kind = {"ssm": "ssm", "moe": "moe",
+                "encdec": "cross"}.get(cfg.family, "dense")
+
+        def body(xx, lp_c):
+            lp, c = lp_c
+            xx, nc = _block_decode(lp, cfg, kind, xx, c, pos)
+            return xx, nc
+
+        if cfg.scan_layers:
+            x, ncaches = jax.lax.scan(body, x, (params["layers"],
+                                                caches["layers"]))
+        else:
+            accs = []
+            for i in range(cfg.n_layers):
+                lp = jax.tree.map(lambda a: a[i], params["layers"])
+                cc = jax.tree.map(lambda a: a[i], caches["layers"])
+                x, nc = body(x, (lp, cc))
+                accs.append(nc)
+            ncaches = jax.tree.map(lambda *cs: jnp.stack(cs), *accs)
+        new_caches = {"layers": ncaches}
+    logits = _logits(params, cfg, x)
+    return logits, new_caches
+
+
+# ---------------------------------------------------------------------------
+# sharding
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: ModelConfig, mesh_shape: dict):
+    """PartitionSpec tree parallel to init_params' output.
+
+    TP/EP over "model"; ZeRO/FSDP over "data": every weight's d_model axis
+    is additionally sharded over the data axis (when divisible) so params +
+    optimizer state scale down with the FULL mesh, not just the model axis.
+    XLA gathers weights on use (per scanned layer) and reduce-scatters the
+    gradients -- the standard FSDP schedule.
+    """
+    tp = mesh_shape.get("model", 1)
+    fs = mesh_shape.get("data", 1)
+
+    def heads_ok(n):
+        return n % tp == 0
+
+    def dd(dim):  # fsdp-shard a dim when divisible
+        return "data" if dim % fs == 0 else None
+
+    dm = dd(cfg.d_model)
+    qspec = P(dm, "model", None) if heads_ok(cfg.n_heads) else \
+        P(dm, None, None)
+    kvspec = P(dm, "model", None) if heads_ok(cfg.n_kv) else \
+        P(dm, None, None)
+    ospec = P("model", None, dm) if heads_ok(cfg.n_heads) else \
+        P(None, None, dm)
+    a = {"wq": qspec, "wk": kvspec, "wv": kvspec, "wo": ospec}
+    if cfg.qk_norm:
+        a["q_norm"] = {"scale": P(None)}
+        a["k_norm"] = {"scale": P(None)}
+    nrm = ({"scale": P(None)} if cfg.norm == "rms"
+           else {"scale": P(None), "bias": P(None)})
+    if cfg.mlp_weight_gathered:
+        # weight-gathered mode: MLP replicated over model (FSDP over data
+        # only); activations stay sequence-sharded through the block
+        fsh = None if dm else dd(cfg.d_ff)
+        mlp = {"w_in": P(dm, fsh), "w_out": P(fsh, dm)}
+        if is_gated(cfg.act):
+            mlp["w_gate"] = P(dm, fsh)
+    else:
+        mlp = {"w_in": P(dm, "model"), "w_out": P("model", dm)}
+        if is_gated(cfg.act):
+            mlp["w_gate"] = P(dm, "model")
+
+    def block_spec(kind):
+        if kind == "ssm":
+            return {"ln1": nrm, "ssm": {
+                "w_in": P("model", dd(2 * 2 * cfg.d_model)), "conv_w":
+                P(None, None),
+                "conv_b": P(None), "a_log": P(None), "dt_bias": P(None),
+                "d_skip": P(None), "out_norm": nrm,
+                "w_out": P(None, "model")}}
+        if kind == "rec":
+            dr = cfg.hybrid.d_rnn or cfg.d_model
+            return {"ln1": nrm, "rec": {
+                "w_x": P(dm, "model"), "w_y": P(dm, "model"),
+                "conv_w": P(None, "model"), "conv_b": P("model"),
+                "w_r": P("model", dd(dr)), "w_i": P("model", dd(dr)),
+                "lam": P(None), "w_out": P("model", dm)},
+                "ln2": nrm, "mlp": mlp}
+        if kind == "moe":
+            mspec = {"router": P(None, None),
+                     "w_in": P("model", dm, None),
+                     "w_out": P("model", None, dm)}
+            if is_gated(cfg.act):
+                mspec["w_gate"] = P("model", dm, None)
+            return {"ln1": nrm, "attn": a, "ln2": nrm, "moe": mspec}
+        if kind == "cross":
+            return {"ln1": nrm, "attn": a, "lnx": nrm, "xattn": a,
+                    "ln2": nrm, "mlp": mlp}
+        return {"ln1": nrm, "attn": a, "ln2": nrm, "mlp": mlp}
+
+    def stacked(spec):
+        return jax.tree.map(lambda s: P(None, *s), spec,
+                            is_leaf=lambda s: isinstance(s, P))
+
+    vshard = "model" if cfg.vocab % tp == 0 else None
+    vdata = "data" if cfg.vocab % fs == 0 else None
+    out = {"embed": P(vshard, dm if vshard else (dm or vdata)), "ln_f": nrm}
+    if not cfg.tie_embeddings:
+        out["lm_head"] = P(dm, vshard)
+    if cfg.family == "ssm":
+        out["layers"] = stacked(block_spec("ssm"))
+    elif cfg.family == "moe":
+        out["layers"] = stacked(block_spec("moe"))
+    elif cfg.family == "hybrid":
+        n_groups, rem = _hybrid_layout(cfg)
+        pat = cfg.hybrid.pattern
+        out["groups"] = {k + str(i): stacked(block_spec(k))
+                         for i, k in enumerate(pat)}
+        out["rem"] = {k + str(i): block_spec(k) for i, k in enumerate(rem)}
+    elif cfg.family == "encdec":
+        out["enc"] = stacked(block_spec("dense"))
+        out["ln_enc"] = nrm
+        out["layers"] = stacked(block_spec("cross"))
+    else:
+        out["layers"] = stacked(block_spec("dense"))
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh_shape: dict, caches, dp=None):
+    """PartitionSpec tree for decode caches: batch over data axes, kv heads
+    over model when divisible."""
+    tp = mesh_shape.get("model", 1)
+    if dp is None:
+        dp = tuple(a for a in ("pod", "data") if a in mesh_shape)
+    kvm = "model" if cfg.n_kv % tp == 0 else None
+
+    def leaf_spec(path, a):
+        name = path[-1].key if hasattr(path[-1], "key") else str(path[-1])
+        top = path[0].key if hasattr(path[0], "key") else str(path[0])
+        lead = () if top == "rem" else (None,)       # layer-stacked?
+        if name in ("k", "v", "xk", "xv"):
+            return P(*lead, dp, None, kvm, None)
+        if name == "state" and a.ndim - len(lead) == 4:   # ssm state
+            return P(*lead, dp, kvm, None, None)
+        if name == "state":                                # rglru state
+            return P(*lead, dp, None)
+        if name == "conv":
+            return P(*lead, dp, None, None)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(leaf_spec, caches)

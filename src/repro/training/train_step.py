@@ -1,0 +1,76 @@
+"""Train state + train step (CE loss, AdamW, remat, optional compression)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.comm import CommConfig
+from repro.models import transformer as tf
+from repro.models.common import ModelConfig, maybe_constrain
+from . import optimizer as opt
+
+import dataclasses
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    params: Any
+    opt_state: Any
+    err_fb: Any          # error-feedback residuals (None unless compression)
+
+
+def make_train_state(key, cfg: ModelConfig, lr=3e-4,
+                     adam: opt.AdamWConfig | None = None):
+    params = tf.init_params(key, cfg)
+    adam = adam or opt.AdamWConfig(lr=lr)
+    err = (opt.init_error_feedback(params)
+           if adam.grad_compress != "none" else None)
+    return TrainState(params, opt.init_opt_state(params), err)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, comm, mesh):
+    logits, aux = tf.forward(params, cfg, batch["inputs"],
+                             batch.get("frontend"), comm, mesh)
+    labels = batch["labels"]
+    mask = batch["mask"]
+    if logits.shape[1] != labels.shape[1]:       # vlm prefix tokens
+        logits = logits[:, -labels.shape[1]:]
+    logits = maybe_constrain(logits, ("pod", "data"), None, "model")
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = (lse - gold) * mask
+    loss = nll.sum() / jnp.maximum(mask.sum(), 1.0)
+    return loss, aux
+
+
+def train_step_fn(cfg: ModelConfig, adam: opt.AdamWConfig | None = None,
+                  comm: CommConfig = CommConfig(), mesh=None):
+    adam = adam or opt.AdamWConfig()
+
+    def step(state: TrainState, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, cfg, batch, comm, mesh)
+        grads, new_err = opt.apply_compression(adam, grads, state.err_fb)
+        new_params, new_opt, om = opt.adamw_update(
+            adam, state.params, grads, state.opt_state)
+        metrics = {"loss": loss, **om, **aux}
+        return TrainState(new_params, new_opt, new_err), metrics
+
+    return step
+
+
+def state_specs(cfg: ModelConfig, mesh_shape: dict):
+    """PartitionSpec tree for the whole TrainState."""
+    from jax.sharding import PartitionSpec as P
+    pspec = tf.param_specs(cfg, mesh_shape)
+    return TrainState(
+        params=pspec,
+        opt_state={"m": pspec, "v": jax.tree.map(lambda s: s, pspec),
+                   "step": P()},
+        err_fb=None,
+    )

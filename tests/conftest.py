@@ -1,0 +1,11 @@
+"""Test session config.
+
+- x64 is enabled: the solver convergence suite needs f64 to resolve
+  up-to-10th-order kernels.  All model/kernel code uses explicit dtypes,
+  so this does not change their behaviour.
+- The device count is left at 1 (smoke tests must see one device);
+  distributed tests spawn subprocesses with XLA_FLAGS themselves.
+"""
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,42 @@
+"""Chunked (flash-style) attention == naive attention, all mask modes."""
+import dataclasses
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_smoke
+from repro.models import attention as attn
+from repro.models import transformer as tf
+
+
+def _run(cfg, s=64, b=2, prefix_len=0, causal=True):
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda a: a[0],
+                     params["layers"])["attn"]  # first layer's attention
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    naive = attn.attention(p, dataclasses.replace(cfg, attn_block=0),
+                           x, pos, causal=causal, prefix_len=prefix_len)
+    chunked = attn.attention(p, dataclasses.replace(cfg, attn_block=16),
+                             x, pos, causal=causal, prefix_len=prefix_len)
+    np.testing.assert_allclose(np.asarray(chunked), np.asarray(naive),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_chunked_causal():
+    _run(get_smoke("qwen3-0.6b"))
+
+
+def test_chunked_sliding_window():
+    _run(get_smoke("starcoder2-7b"))  # window=16 in the smoke config
+
+
+def test_chunked_prefix_lm():
+    _run(get_smoke("paligemma-3b"), prefix_len=12)
+
+
+def test_chunked_uneven_blocks():
+    _run(get_smoke("qwen3-0.6b"), s=50)  # 50 % 16 != 0

@@ -1,0 +1,96 @@
+"""Launch layer: HLO stats parsing, scan-undercount rationale, dry-run cell."""
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.launch import hlo_stats
+
+HLO_SAMPLE = """
+ENTRY %main {
+  %p0 = f32[16,128]{1,0} parameter(0)
+  %ag = f32[256,128]{1,0} all-gather(f32[16,128]{1,0} %p0), dims={0}
+  %ar = bf16[64]{0} all-reduce(bf16[64]{0} %p0x), to_apply=%add
+  %a2a-start = f32[8,32]{1,0} all-to-all-start(f32[8,32]{1,0} %x)
+  %a2a-done = f32[8,32]{1,0} all-to-all-done(%a2a-start)
+  %cp = u8[1024]{0} collective-permute(u8[1024]{0} %y)
+  %a2at = (c64[9,8,4]{2,1,0}, c64[9,8,4]{2,1,0}) all-to-all(%f1, %f2), channel_id=1
+  %dot = f32[16,16]{1,0} dot(f32[16,8] %a, f32[8,16] %b)
+}
+"""
+
+
+def test_collective_stats_parsing():
+    st = hlo_stats.collective_stats(HLO_SAMPLE)
+    assert st["all-gather"]["count"] == 1
+    assert st["all-gather"]["bytes"] == 16 * 128 * 4
+    assert st["all-reduce"]["bytes"] == 64 * 2
+    assert st["all-to-all"]["count"] == 2          # start counted once
+    # inline-operand form + tuple-result form (c64 = 8 bytes/elem)
+    assert st["all-to-all"]["bytes"] == 8 * 32 * 4 + 2 * 9 * 8 * 4 * 8
+    assert st["collective-permute"]["bytes"] == 1024
+    assert st["total_count"] == 5
+
+
+def test_fft_flops_parsing():
+    txt = ("%fft.1 = c64[9,8,1536]{2,1,0} fft(%x), fft_type=FFT, "
+           "fft_length={1536}")
+    import math
+    want = 5.0 * 9 * 8 * 1536 * math.log2(1536)
+    assert hlo_stats.fft_flops(txt) == pytest.approx(want)
+
+
+def test_cost_analysis_undercounts_scan():
+    """The documented XLA behaviour that motivates flops_probe."""
+    def scanned(x, ws):
+        y, _ = jax.lax.scan(lambda c, w: (jnp.tanh(c @ w), None), x, ws)
+        return y
+
+    def unrolled(x, ws):
+        for i in range(8):
+            x = jnp.tanh(x @ ws[i])
+        return x
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    cs = jax.jit(scanned).lower(x, ws).compile().cost_analysis()
+    cu = jax.jit(unrolled).lower(x, ws).compile().cost_analysis()
+    # the scanned body is counted once -> ~8x undercount
+    assert cu["flops"] > 6 * cs["flops"]
+
+
+def test_model_flops_sane():
+    from repro.configs import get_config
+    from repro.launch.cells import model_flops, _active_params
+    # qwen3-0.6b total params ~ 0.75B incl embeddings
+    n = _active_params(get_config("qwen3-0.6b"))
+    assert 0.4e9 < n < 1.2e9
+    # moe active << total: 22B-ish active for qwen3-235b
+    na = _active_params(get_config("qwen3-moe-235b-a22b"))
+    assert 10e9 < na < 40e9
+    assert model_flops(get_config("qwen3-0.6b"), 100, "train") == \
+        pytest.approx(6 * n * 100)
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell_subprocess(tmp_path):
+    """End-to-end dry-run of one cell on the 512-device production mesh."""
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.dryrun", "--arch", "qwen3-0.6b",
+         "--shape", "decode_32k", "--mesh", "single", "--out",
+         str(tmp_path), "--tag", "t"],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-2000:]
+    rec = json.loads(open(tmp_path / "t.jsonl").read().strip())
+    assert rec["status"] == "ok", rec
+    assert rec["n_chips"] == 256
+    assert rec["roofline"]["t_compute_s"] > 0
+    assert rec["cost"]["flops"] > 0

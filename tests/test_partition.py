@@ -1,0 +1,51 @@
+"""Properties of the Appendix-A invertible balanced partition."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import partition as pt
+
+
+def test_paper_example():
+    """N=32, P=7 -> [5,5,5,5,4,4,4]; i=14 -> rank 2; i=27 -> rank 5."""
+    np.testing.assert_array_equal(pt.counts(32, 7), [5, 5, 5, 5, 4, 4, 4])
+    assert pt.index_to_rank(32, 7, 14) == 2
+    assert pt.index_to_rank(32, 7, 27) == 5
+
+
+def test_regular_case_more_homogeneous():
+    """N=32, P=6: excess spread over the range, not piled on the front."""
+    c = pt.counts(32, 6)
+    assert c.sum() == 32
+    assert c.max() - c.min() <= 1
+    # excess data are strided (groups of S=3), not the first R ranks
+    assert list(c) == [5, 5, 6, 5, 5, 6]
+
+
+@settings(max_examples=300, deadline=None)
+@given(n=st.integers(1, 5000), p=st.integers(1, 600))
+def test_partition_is_a_partition(n, p):
+    c = pt.counts(n, p)
+    assert c.sum() == n
+    assert (c >= 0).all()
+    assert c.max() - c.min() <= 1  # balanced
+
+
+@settings(max_examples=300, deadline=None)
+@given(n=st.integers(1, 3000), p=st.integers(1, 300))
+def test_inverse_consistency(n, p):
+    """index_to_rank is the exact inverse of the rank->range map."""
+    ranks = np.arange(p)
+    starts = pt.rank_first_index(n, p, ranks)
+    ends = pt.rank_first_index(n, p, ranks + 1)
+    idx = np.arange(n)
+    owner = pt.index_to_rank(n, p, idx)
+    assert ((idx >= starts[owner]) & (idx < ends[owner])).all()
+
+
+@settings(max_examples=100, deadline=None)
+@given(p=st.integers(1, 500), r=st.integers(0, 499))
+def test_send_order_is_permutation_starting_at_neighbor(p, r):
+    r = r % p
+    order = pt.send_order(p, r)
+    assert sorted(order) == list(range(p))
+    assert order[0] == (r + 1) % p

@@ -1,0 +1,54 @@
+"""Ring attention (seq-sharded KV rotation) == naive attention.
+
+Subprocess with 8 host devices; covers causal, sliding-window and
+prefix-LM masks, GQA head grouping, and a head count (6) that does NOT
+divide the ring size (the starcoder2 situation).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import dataclasses
+import numpy as np
+import jax, jax.numpy as jnp
+from repro.configs import get_smoke
+from repro.models import attention as attn
+from repro.models import transformer as tf
+
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+
+for arch, kw in (("qwen3-0.6b", {}),                      # causal + qk_norm
+                 ("starcoder2-7b", {}),                   # window
+                 ("paligemma-3b", {"prefix_len": 12})):   # prefix-LM
+    cfg = get_smoke(arch)
+    cfg = dataclasses.replace(cfg, n_heads=6, n_kv=2)      # 6 % 4 != 0
+    params = tf.init_params(jax.random.PRNGKey(0), cfg)
+    p = jax.tree.map(lambda a: a[0], params["layers"])["attn"]
+    rng = np.random.default_rng(0)
+    b, s = 2, 32
+    x = jnp.asarray(rng.standard_normal((b, s, cfg.d_model)), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(s), (b, s))
+    want = attn.attention(p, cfg, x, pos, causal=True, **kw)
+    got = jax.jit(lambda xx: attn.attention_ring(
+        p, cfg, xx, mesh, causal=True, **kw))(x)
+    err = float(jnp.max(jnp.abs(got - want)))
+    assert err < 5e-2, (arch, err)
+print("OK")
+"""
+
+
+@pytest.mark.slow
+def test_ring_attention_matches_naive():
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    assert out.returncode == 0, out.stderr[-3000:]
+    assert "OK" in out.stdout

@@ -1,0 +1,74 @@
+"""DCT/DST I-IV vs scipy.fft oracle + inverse roundtrip properties."""
+import numpy as np
+import pytest
+import scipy.fft as sfft
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bc import TransformKind
+from repro.core import transforms as tr
+
+KINDS = {
+    TransformKind.DCT1: ("dct", 1), TransformKind.DCT2: ("dct", 2),
+    TransformKind.DCT3: ("dct", 3), TransformKind.DCT4: ("dct", 4),
+    TransformKind.DST1: ("dst", 1), TransformKind.DST2: ("dst", 2),
+    TransformKind.DST3: ("dst", 3), TransformKind.DST4: ("dst", 4),
+}
+
+
+def _scipy(kind, x):
+    name, t = KINDS[kind]
+    fn = sfft.dct if name == "dct" else sfft.dst
+    return fn(x, type=t, axis=-1, norm=None)
+
+
+@pytest.mark.parametrize("kind", list(KINDS))
+@pytest.mark.parametrize("m", [3, 4, 5, 8, 16, 17, 33])
+def test_r2r_matches_scipy(kind, m):
+    if kind == TransformKind.DCT1 and m < 2:
+        pytest.skip("DCT-I needs m >= 2")
+    rng = np.random.default_rng(42 + m)
+    x = rng.standard_normal((2, m)).astype(np.float64)
+    got = np.asarray(tr.r2r_forward(jnp.asarray(x), kind))
+    want = _scipy(kind, x)
+    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-8)
+
+
+@pytest.mark.parametrize("kind", list(KINDS))
+@pytest.mark.parametrize("m", [4, 9, 16])
+def test_r2r_roundtrip(kind, m):
+    rng = np.random.default_rng(m)
+    x = rng.standard_normal((3, m))
+    y = tr.r2r_forward(jnp.asarray(x), kind)
+    back = tr.r2r_backward(y, kind) * tr.r2r_normfact(kind, m)
+    np.testing.assert_allclose(np.asarray(back), x, rtol=1e-7, atol=1e-9)
+
+
+@pytest.mark.parametrize("kind", [TransformKind.DCT2, TransformKind.DST2])
+def test_r2r_float32(kind):
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((4, 32)).astype(np.float32)
+    got = np.asarray(tr.r2r_forward(jnp.asarray(x), kind))
+    assert got.dtype == np.float32
+    np.testing.assert_allclose(got, _scipy(kind, x), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(min_value=3, max_value=40),
+    kind=st.sampled_from(list(KINDS)),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_r2r_linearity_property(m, kind, seed):
+    """Property: T(a x + b y) == a T(x) + b T(y) and scipy agreement."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(m)
+    y = rng.standard_normal(m)
+    a, b = rng.standard_normal(2)
+    xa, ya = jnp.asarray(x), jnp.asarray(y)
+    lhs = np.asarray(tr.r2r_forward(a * xa + b * ya, kind))
+    rhs = a * np.asarray(tr.r2r_forward(xa, kind)) + b * np.asarray(
+        tr.r2r_forward(ya, kind))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-7, atol=1e-7)
+    np.testing.assert_allclose(lhs, _scipy(kind, a * x + b * y),
+                               rtol=1e-7, atol=1e-7)
