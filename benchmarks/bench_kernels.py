@@ -1,11 +1,81 @@
-"""Pallas kernels (interpret mode) vs jnp reference timings + allclose."""
+"""Kernel + transform-path benchmarks.
+
+Two jobs:
+  1. Pallas kernels (interpret mode) vs jnp reference timings + allclose
+     (the historical CSV rows, still consumed by benchmarks/run.py);
+  2. the r2r transform hot path: NEW half-spectrum rfft transforms
+     (repro.core.transforms) vs the SEED full-complex-FFT path
+     (repro.core.transforms_ref), jit-compiled, on an N=256^3-equivalent
+     batch -- written to ``BENCH_kernels.json`` so the perf trajectory of
+     the transform engine is recorded per PR.
+
+Estimated HBM bytes per transform (per batch row of length M, f32):
+  old: read M real + write/read 2M complex ext + complex FFT out 2M complex
+       + twiddle read M complex + write M real
+  new: read M real + write/read 2M real ext + rfft out (M+1) complex
+       + twiddle read (M+1) complex + write M real
+i.e. the extension and FFT traffic halves.
+"""
 from __future__ import annotations
+
+import json
+import os
 
 import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
 from repro.kernels.fft_stockham import fft_stockham
+
+
+def _bytes_est(m: int, rows: int, path: str) -> int:
+    if path == "old":
+        per_row = m * 4 + 2 * (2 * m * 8) + 2 * m * 8 + m * 8 + m * 4
+    else:
+        per_row = m * 4 + 2 * (2 * m * 4) + (m + 1) * 8 + (m + 1) * 8 + m * 4
+    return per_row * rows
+
+
+def bench_r2r_paths(quick=True):
+    """Old full-complex vs new half-spectrum r2r transforms, jitted."""
+    import jax
+    from common import time_fn
+    from repro.core.bc import TransformKind
+    from repro.core import transforms as tr
+    from repro.core import transforms_ref as trf
+
+    # N=256^3 batch: transforms act on the last axis of a (256^2, 256) view
+    m = 256
+    rows = 64 * 64 if quick else 256 * 256
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((rows, m)), jnp.float32)
+
+    kinds = {
+        "dct1": TransformKind.DCT1, "dct2": TransformKind.DCT2,
+        "dct3": TransformKind.DCT3, "dct4": TransformKind.DCT4,
+        "dst1": TransformKind.DST1, "dst2": TransformKind.DST2,
+        "dst3": TransformKind.DST3, "dst4": TransformKind.DST4,
+    }
+    per_kind = {}
+    for name, kind in kinds.items():
+        new_fn = jax.jit(lambda v, k=kind: tr.r2r_forward(v, k))
+        old_fn = jax.jit(lambda v, k=kind: trf.r2r_forward(v, k))
+        t_new = time_fn(new_fn, x)
+        t_old = time_fn(old_fn, x)
+        err = float(jnp.max(jnp.abs(new_fn(x) - old_fn(x))))
+        per_kind[name] = {
+            "old_us": t_old * 1e6, "new_us": t_new * 1e6,
+            "speedup": t_old / t_new, "maxerr_vs_old": err,
+        }
+    speedups = [v["speedup"] for v in per_kind.values()]
+    return {
+        "shape": [rows, m],
+        "dtype": "float32",
+        "per_kind": per_kind,
+        "geomean_speedup": float(np.exp(np.mean(np.log(speedups)))),
+        "old_bytes_est": _bytes_est(m, rows, "old"),
+        "new_bytes_est": _bytes_est(m, rows, "new"),
+    }
 
 
 def run(quick=True):
@@ -35,11 +105,41 @@ def run(quick=True):
 
     t_kernel = time_fn(ops.dct2_post_twiddle, f)
     rows.append(("kern_twiddle_pack", t_kernel * 1e6, "interpret"))
+
+    r2r = bench_r2r_paths(quick=quick)
+    rows.append(("r2r_half_spectrum_speedup",
+                 r2r["geomean_speedup"],
+                 f"old_bytes={r2r['old_bytes_est']};"
+                 f"new_bytes={r2r['new_bytes_est']}"))
+
+    payload = {
+        "mode": "quick" if quick else "full",
+        "kernels": {name: {"us": us, "derived": derived}
+                    for name, us, derived in rows if name.startswith("kern")},
+        "r2r_transform_path": r2r,
+        "normalization_folding": {
+            # elementwise full-array passes after the spectral multiply:
+            # seed = green multiply + one normfact multiply per r2r dir (3);
+            # now = the single fused green multiply (normfacts folded in).
+            "seed_elementwise_passes": 4,
+            "new_elementwise_passes": 1,
+        },
+    }
+    # anchored to the repo root so the recorded trajectory does not depend
+    # on the caller's cwd (run.py may be invoked from anywhere); quick-mode
+    # runs get their own file so they never clobber the recorded full-size
+    # (N=256^3 acceptance) numbers
+    fname = "BENCH_kernels.quick.json" if quick else "BENCH_kernels.json"
+    out_path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), fname)
+    with open(out_path, "w") as fh:
+        json.dump(payload, fh, indent=2)
     return rows
 
 
 if __name__ == "__main__":
     import sys
     sys.path.insert(0, "benchmarks")
+    ap_quick = "--full" not in sys.argv
     from common import emit
-    emit(run())
+    emit(run(quick=ap_quick))

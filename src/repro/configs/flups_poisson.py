@@ -17,6 +17,7 @@ class PoissonArchConfig:
     bcs: tuple
     green: str
     batch: int = 1              # fields solved per step (data parallel)
+    engine: str = "xla"         # transform engine: "xla" | "pallas"
 
 
 U = (BCType.UNB, BCType.UNB)

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from .bc import BCType, DirBC, DataLayout
 from . import green as gr
+from .engine import as_engine, build_schedule
 from .solver import make_plan, build_green, _fwd_1d, _bwd_1d
 from .spectral import apply_derivative, swap_bc
 
@@ -40,8 +41,9 @@ class BiotSavartSolver:
 
     def __init__(self, shape, L, bcs, layout=DataLayout.CELL,
                  green_kind=gr.GreenKind.CHAT2, fd_order: int = 0,
-                 eps_factor: float = 2.0):
+                 eps_factor: float = 2.0, engine="xla"):
         self.fd_order = fd_order
+        self.engine = as_engine(engine)
         bcs = [[DirBC(*b) if not isinstance(b, DirBC) else b for b in row]
                for row in bcs]
         self.fplans = [make_plan(shape, L, bcs[c], layout, green_kind,
@@ -60,27 +62,30 @@ class BiotSavartSolver:
             self.uplans.append(make_plan(shape, L, bc1, layout, green_kind,
                                          eps_factor))
         self.greens = [build_green(p) for p in self.uplans]
+        self.fscheds = [build_schedule(p, self.engine) for p in self.fplans]
+        self.uscheds = [build_schedule(p, self.engine) for p in self.uplans]
         self._solve = jax.jit(self._solve_impl)
 
     @property
     def input_shape(self):
         return (3,) + self.fplans[0].input_shape
 
-    def _fwd(self, f, plan):
+    def _fwd(self, f, plan, sched):
         y = f
         for d in plan.order:
-            y = _fwd_1d(y, plan.dirs[d])
+            y = _fwd_1d(y, plan.dirs[d], sched)
         return y
 
-    def _bwd(self, y, plan, dtype):
+    def _bwd(self, y, plan, sched, dtype):
         for d in reversed(plan.order):
-            y = _bwd_1d(y, plan.dirs[d], dtype)
+            y = _bwd_1d(y, plan.dirs[d], sched)
         if jnp.iscomplexobj(y):
             y = y.real
         return y.astype(dtype)
 
     def _solve_impl(self, f):
-        fh = [self._fwd(f[c], self.fplans[c]) for c in range(3)]
+        fh = [self._fwd(f[c], self.fplans[c], self.fscheds[c])
+              for c in range(3)]
         out = []
         for c, a, b in _CYCLIC:
             up = self.uplans[c]
@@ -91,7 +96,7 @@ class BiotSavartSolver:
             uhat = (t1 - t2) * jnp.asarray(self.greens[c]).astype(
                 t1.dtype if not jnp.iscomplexobj(t1) else
                 jnp.asarray(self.greens[c]).dtype)
-            out.append(self._bwd(uhat, up, f.dtype))
+            out.append(self._bwd(uhat, up, self.uscheds[c], f.dtype))
         return jnp.stack(out)
 
     def solve(self, f):

@@ -1,0 +1,110 @@
+"""Pluggable transform engine: the single hot path of both solvers.
+
+The paper's pipeline is (per direction) 1-D transform -> pointwise Green
+multiply -> inverse transforms; this module decides HOW each stage executes:
+
+  engine="xla"     pure jnp/XLA ops (rfft/irfft half-spectrum transforms,
+                   fused elementwise) -- the default everywhere.
+  engine="pallas"  the hand-written TPU kernels take over the hot loops:
+                   ``twiddle_pack`` for the r2r post-twiddle,
+                   ``fft_stockham`` for power-of-two (r)FFT backends, and
+                   ``spectral_scale``/``green_multiply`` for the fused
+                   Green multiply.  Non-power-of-two FFT lengths fall back
+                   to jnp transparently, so any plan works on any engine.
+
+A plan is compiled once into a ``TransformSchedule``: per-direction twiddle
+tables (plan-time numpy constants handed to the kernels) plus the combined
+normalization of every backward r2r transform.  That normalization is folded
+into the Green's function by ``build_green`` (one multiply for the whole
+solve), so the backward pass emits ZERO standalone normalization multiplies
+-- see tests/test_engine.py which counts them in the jaxpr.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+__all__ = ["TransformEngine", "TransformSchedule", "as_engine",
+           "build_schedule", "folded_normfact", "ENGINES"]
+
+ENGINES = ("xla", "pallas")
+
+
+@dataclass(frozen=True)
+class TransformEngine:
+    """Execution backend selection for the transform + pointwise stages.
+
+    ``interpret``: run Pallas kernels in interpret mode (CPU validation);
+    on a real TPU runtime pass ``interpret=False`` to lower to Mosaic.
+    """
+
+    name: str = "xla"
+    interpret: bool = True
+
+    def __post_init__(self):
+        if self.name not in ENGINES:
+            raise ValueError(
+                f"unknown engine {self.name!r}; expected one of {ENGINES}")
+
+    @property
+    def use_pallas(self) -> bool:
+        return self.name == "pallas"
+
+
+def as_engine(engine) -> TransformEngine:
+    """Accept ``"xla"`` / ``"pallas"`` / TransformEngine / None."""
+    if engine is None:
+        return TransformEngine()
+    if isinstance(engine, TransformEngine):
+        return engine
+    return TransformEngine(str(engine))
+
+
+@dataclass(frozen=True)
+class TransformSchedule:
+    """Plan-time constants for one solve: per-direction twiddle tables and
+    the folded normalization (quadrature h weights stay in build_green)."""
+
+    engine: TransformEngine
+    fwd_tables: tuple    # per logical dim: twiddle dict for the forward kind
+    bwd_tables: tuple    # per logical dim: twiddle dict for the inverse kind
+    norm: float          # prod of r2r normfacts, folded into the Green
+
+    def green_multiply(self, yhat, green):
+        """The fused pointwise pass (Green x normalization in one multiply)."""
+        if self.engine.use_pallas:
+            from repro.kernels import ops
+            return ops.green_multiply(yhat, green,
+                                      interpret=self.engine.interpret)
+        if jnp.iscomplexobj(yhat):
+            return yhat * green
+        return yhat * green.astype(yhat.dtype)
+
+
+def folded_normfact(plan) -> float:
+    """The combined backward normalization of a plan -- the single factor
+    ``build_green`` folds into the Green's function (every direction, DFT
+    included; their normfact is 1.0)."""
+    norm = 1.0
+    for p in plan.dirs:
+        norm *= p.normfact
+    return norm
+
+
+def build_schedule(plan, engine=None) -> TransformSchedule:
+    """Compile a ``PoissonPlan`` into its per-direction transform schedule."""
+    from . import transforms as tr
+    from .bc import INVERSE_KIND
+
+    engine = as_engine(engine)
+    fwd, bwd = [], []
+    for p in plan.dirs:
+        if p.kind is None:       # DFT direction: no r2r twiddles
+            fwd.append(None)
+            bwd.append(None)
+        else:
+            fwd.append(tr.twiddle_tables(p.kind, p.n_fft))
+            bwd.append(tr.twiddle_tables(INVERSE_KIND[p.kind], p.n_fft))
+    return TransformSchedule(engine, tuple(fwd), tuple(bwd),
+                             folded_normfact(plan))

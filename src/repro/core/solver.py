@@ -29,6 +29,7 @@ from .bc import (BCType, DataLayout, DirBC, TransformKind, r2r_kind,
                  INVERSE_KIND)
 from . import transforms as tr
 from . import green as gr
+from .engine import as_engine, build_schedule, folded_normfact
 
 __all__ = ["Plan1D", "PoissonPlan", "PoissonSolver", "make_plan"]
 
@@ -211,8 +212,15 @@ def _green_dct1_align(gh: np.ndarray, axis: int, p: Plan1D) -> np.ndarray:
 
 
 def build_green(plan: PoissonPlan) -> np.ndarray:
-    """Transformed Green's function aligned with the rhs spectral storage."""
+    """Transformed Green's function aligned with the rhs spectral storage.
+
+    The combined normalization of every backward r2r transform (the product
+    of the per-direction ``normfact``) is folded in HERE, once at plan time:
+    the backward pass then runs unnormalized transforms and the solve
+    performs a single pointwise multiply total (see ``TransformSchedule``).
+    """
     dirs = plan.dirs
+    norm = folded_normfact(plan)
     unb = [p for p in dirs if p.is_unbounded_like]
     spec = [p for p in dirs if not p.is_unbounded_like]
     n_unb = len(unb)
@@ -226,7 +234,7 @@ def build_green(plan: PoissonPlan) -> np.ndarray:
         w2 = sum(g * g for g in grids)
         gh = gr.spectral_symbol(kind, w2, h_ref, w_axes=w,
                                 eps_factor=plan.eps_factor)
-        return gh
+        return gh * norm
 
     # physical axes for unbounded-ish dirs, mode axes for spectral dirs
     axes_coord = []
@@ -298,18 +306,19 @@ def build_green(plan: PoissonPlan) -> np.ndarray:
                 g = g[tuple(sl)]
         else:  # semi
             g = _green_dct1_align(g, d, p)
-    return g
+    return g * norm
 
 
 # ---------------------------------------------------------------------------
 # forward / backward 1-D ops (jnp, last-axis via moveaxis)
 # ---------------------------------------------------------------------------
 
-def _fwd_1d(x, p: Plan1D):
+def _fwd_1d(x, p: Plan1D, sched=None):
     # measured (EXPERIMENTS.md section Perf, flups cell): transforming along
     # the native axis (jnp.fft axis=d) REGRESSES bytes by 11% -- XLA
     # transposes internally for non-minor FFT axes and loses the fusion of
     # the explicit moveaxis (a no-op when d is already last). Keep moveaxis.
+    engine = sched.engine if sched is not None else None
     x = jnp.moveaxis(x, p.dim, -1)
     if p.flip:
         x = x[..., ::-1]
@@ -318,22 +327,27 @@ def _fwd_1d(x, p: Plan1D):
         pad = [(0, 0)] * (x.ndim - 1) + [(0, p.n_fft - p.n_in)]
         x = jnp.pad(x, pad)
     if p.category in ("sym", "semi"):
-        y = tr.r2r_forward(x, p.kind)
+        tables = sched.fwd_tables[p.dim] if sched is not None else None
+        y = tr.r2r_forward(x, p.kind, engine=engine, tables=tables)
     elif p.dft == "r2c":
-        y = jnp.fft.rfft(x, axis=-1)
+        y = tr._rfft(x, engine)
     else:
-        y = jnp.fft.fft(x, axis=-1)
+        y = tr._cfft(x, engine)
     return jnp.moveaxis(y, -1, p.dim)
 
 
-def _bwd_1d(y, p: Plan1D, out_dtype):
+def _bwd_1d(y, p: Plan1D, sched=None):
+    # NOTE: no normalization multiply here -- every direction's normfact is
+    # folded into the Green's function at plan time (build_green).
+    engine = sched.engine if sched is not None else None
     y = jnp.moveaxis(y, p.dim, -1)
     if p.category in ("sym", "semi"):
-        x = tr.r2r_backward(y, p.kind) * p.normfact
+        tables = sched.bwd_tables[p.dim] if sched is not None else None
+        x = tr.r2r_backward(y, p.kind, engine=engine, tables=tables)
     elif p.dft == "r2c":
-        x = jnp.fft.irfft(y, n=p.n_fft, axis=-1)
+        x = tr._irfft(y, p.n_fft, engine)
     else:
-        x = jnp.fft.ifft(y, axis=-1)
+        x = tr._cfft(y, engine, inverse=True)
     x = x[..., :p.n_in]
     # place into the user-sized axis
     left = p.in_start
@@ -353,11 +367,17 @@ def _bwd_1d(y, p: Plan1D, out_dtype):
 # ---------------------------------------------------------------------------
 
 class PoissonSolver:
-    """u = solve(f): FFT-based solution of lap(u) = f with mixed BCs."""
+    """u = solve(f): FFT-based solution of lap(u) = f with mixed BCs.
+
+    ``engine``: "xla" (default) or "pallas" -- see ``repro.core.engine``.
+    """
 
     def __init__(self, shape, L, bcs, layout=DataLayout.CELL,
-                 green_kind=gr.GreenKind.CHAT2, eps_factor=2.0):
+                 green_kind=gr.GreenKind.CHAT2, eps_factor=2.0,
+                 engine="xla"):
         self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor)
+        self.engine = as_engine(engine)
+        self.schedule = build_schedule(self.plan, self.engine)
         self._green = build_green(self.plan)
         self._solve = jax.jit(self._solve_impl)
 
@@ -367,13 +387,14 @@ class PoissonSolver:
 
     def _solve_impl(self, f):
         plan = self.plan
+        sched = self.schedule
         green = jnp.asarray(self._green).astype(f.dtype)
         y = f
         for d in plan.order:
-            y = _fwd_1d(y, plan.dirs[d])
-        y = y * green
+            y = _fwd_1d(y, plan.dirs[d], sched)
+        y = sched.green_multiply(y, green)
         for d in reversed(plan.order):
-            y = _bwd_1d(y, plan.dirs[d], f.dtype)
+            y = _bwd_1d(y, plan.dirs[d], sched)
         if jnp.iscomplexobj(y):
             y = y.real
         return y.astype(f.dtype)

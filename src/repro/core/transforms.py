@@ -1,13 +1,31 @@
 """1-D transforms used by the solver, all on the LAST axis.
 
-Every real-to-real transform (DCT/DST types I-IV) is implemented with a
-single complex FFT plus pre/post twiddles, matching ``scipy.fft`` unnormalized
-("backward") conventions exactly -- scipy is the oracle in the tests.
+Every real-to-real transform (DCT/DST types I-IV) runs a HALF-SPECTRUM real
+FFT (``jnp.fft.rfft`` / ``irfft``) on the real (anti)symmetric extension --
+half the FLOPs and bytes of the full-complex algorithm (kept in
+``transforms_ref`` as the old-path baseline).  No complex intermediates exist
+before the twiddle: forward transforms post-twiddle the rfft half spectrum
+(``y = a * re + b * im``, the ``twiddle_pack`` kernel shape), inverse-family
+transforms pre-twiddle the real input into the half spectrum consumed by
+``irfft``.  All conventions match ``scipy.fft`` unnormalized ("backward") --
+scipy is the oracle in the tests.
+
+Twiddle tables are precomputed per ``(kind, m)`` (``twiddle_tables``, cached)
+so a plan's ``TransformSchedule`` can hand them to the Pallas post-twiddle
+kernel; constant factors (the 2M of the type-III inverses) are folded into
+the tables, so no transform performs a standalone scaling multiply.
 
 The pencil engine always shuffles the active direction to the last axis
 (flups' ``shuffle()``), so all transforms here are axis=-1.
+
+Engine selection: every public transform takes ``engine=None`` (pure XLA) or
+a ``repro.core.engine.TransformEngine``; ``engine="pallas"`` routes the
+post-twiddle through the ``twiddle_pack`` Pallas kernel and power-of-two
+rfft/irfft through the ``fft_stockham`` kernel (see ``repro.kernels.ops``).
 """
 from __future__ import annotations
+
+from functools import lru_cache
 
 import numpy as np
 import jax.numpy as jnp
@@ -17,7 +35,7 @@ from .bc import TransformKind
 __all__ = [
     "dct1", "dct2", "dct3", "dct4",
     "dst1", "dst2", "dst3", "dst4",
-    "r2r_forward", "r2r_backward", "r2r_normfact",
+    "r2r_forward", "r2r_backward", "r2r_normfact", "twiddle_tables",
 ]
 
 
@@ -25,100 +43,213 @@ def _rdtype(x):
     return x.dtype
 
 
+def _use_pallas(engine) -> bool:
+    return engine is not None and getattr(engine, "use_pallas", False)
+
+
+def _pow2(n: int) -> bool:
+    return n >= 2 and (n & (n - 1)) == 0
+
+
+# ---------------------------------------------------------------------------
+# engine-aware FFT backends (jnp by default, Stockham kernel for pallas)
+# ---------------------------------------------------------------------------
+
+def _rfft(z, engine):
+    if _use_pallas(engine) and _pow2(z.shape[-1]):
+        from repro.kernels import ops
+        return ops.rfft_pallas(z, interpret=engine.interpret)
+    return jnp.fft.rfft(z, axis=-1)
+
+
+def _irfft(c, n, engine):
+    if _use_pallas(engine) and _pow2(n):
+        from repro.kernels import ops
+        return ops.irfft_pallas(c, n, interpret=engine.interpret)
+    return jnp.fft.irfft(c, n=n, axis=-1)
+
+
+def _cfft(z, engine, inverse=False):
+    """Engine-aware complex FFT over the last axis (the solver's c2c dirs)."""
+    if not jnp.iscomplexobj(z):
+        z = z.astype(jnp.complex128 if z.dtype == jnp.float64
+                     else jnp.complex64)
+    if _use_pallas(engine) and _pow2(z.shape[-1]):
+        from repro.kernels import ops
+        return ops.fft1d(z, inverse=inverse, interpret=engine.interpret)
+    return (jnp.fft.ifft if inverse else jnp.fft.fft)(z, axis=-1)
+
+
+def _post(re, im, a, b, engine, out_dtype):
+    """y = a * re + b * im along the last axis (the r2r post-twiddle)."""
+    if _use_pallas(engine):
+        from repro.kernels import ops
+        return ops.post_twiddle(re, im, a, b,
+                                interpret=engine.interpret).astype(out_dtype)
+    av = jnp.asarray(a, dtype=out_dtype)
+    bv = jnp.asarray(b, dtype=out_dtype)
+    return (av * re + bv * im).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# twiddle tables (plan-time constants, float64; cast at use)
+# ---------------------------------------------------------------------------
+
+@lru_cache(maxsize=None)
+def twiddle_tables(kind: TransformKind, m: int):
+    """Precomputed twiddle constants for a size-``m`` transform of ``kind``.
+
+    Keys (all values ``np.float64``):
+      post_a/post_b  forward post-twiddle  ``y = a*re + b*im``
+      pre_re/pre_im  inverse-family pre-twiddle (2M factor folded in)
+      split_c/split_s  type-IV cos/sin input split
+    """
+    if kind in (TransformKind.DCT1, TransformKind.DST1):
+        return {}
+    if kind == TransformKind.DCT2:
+        k = np.arange(m)
+        th = np.pi * k / (2.0 * m)
+        return {"post_a": np.cos(th), "post_b": np.sin(th)}
+    if kind == TransformKind.DST2:
+        k = np.arange(1, m + 1)
+        th = np.pi * k / (2.0 * m)
+        return {"post_a": np.sin(th), "post_b": -np.cos(th)}
+    if kind == TransformKind.DCT3:
+        k = np.arange(m)
+        th = np.pi * k / (2.0 * m)
+        return {"pre_re": 2.0 * m * np.cos(th),
+                "pre_im": 2.0 * m * np.sin(th)}
+    if kind == TransformKind.DST3:
+        k = np.arange(1, m + 1)
+        th = np.pi * k / (2.0 * m)
+        return {"pre_re": 2.0 * m * np.sin(th),
+                "pre_im": -2.0 * m * np.cos(th)}
+    if kind in (TransformKind.DCT4, TransformKind.DST4):
+        n = np.arange(m)
+        b = np.pi * (2 * n + 1) / (4.0 * m)
+        return {"split_c": np.cos(b), "split_s": np.sin(b)}
+    raise ValueError(kind)
+
+
+def _tables(kind, m, tables):
+    return twiddle_tables(kind, m) if tables is None else tables
+
+
 # ---------------------------------------------------------------------------
 # DCT types
 # ---------------------------------------------------------------------------
 
-def dct1(x):
-    """DCT-I: y_k = x_0 + (-1)^k x_{M-1} + 2 sum_{n=1}^{M-2} x_n cos(pi k n/(M-1))."""
-    m = x.shape[-1]
+def dct1(x, engine=None, tables=None):
+    """DCT-I: y_k = x_0 + (-1)^k x_{M-1} + 2 sum_{n=1}^{M-2} x_n cos(pi k n/(M-1)).
+
+    Even extension of length 2(M-1); the rfft of a real even signal is real,
+    and its M half-spectrum bins are exactly the DCT-I coefficients.
+    """
     z = jnp.concatenate([x, x[..., -2:0:-1]], axis=-1)  # even ext, len 2(M-1)
-    y = jnp.fft.fft(z, axis=-1).real[..., :m]
-    return y.astype(_rdtype(x))
+    return _rfft(z, engine).real.astype(_rdtype(x))
 
 
-def dct2(x):
+def dct2(x, engine=None, tables=None):
     """DCT-II: y_k = 2 sum_n x_n cos(pi k (2n+1) / (2M))."""
     m = x.shape[-1]
-    z = jnp.concatenate([x, x[..., ::-1]], axis=-1)  # len 2M
-    k = jnp.arange(m)
-    tw = jnp.exp(-1j * np.pi * k / (2 * m))
-    y = (tw * jnp.fft.fft(z, axis=-1)[..., :m]).real
-    return y.astype(_rdtype(x))
+    t = _tables(TransformKind.DCT2, m, tables)
+    z = jnp.concatenate([x, x[..., ::-1]], axis=-1)     # even ext, len 2M
+    f = _rfft(z, engine)[..., :m]
+    return _post(f.real, f.imag, t["post_a"], t["post_b"], engine, _rdtype(x))
 
 
-def dct3(x):
-    """DCT-III: y_k = x_0 + 2 sum_{n=1}^{M-1} x_n cos(pi n (2k+1) / (2M))."""
+def dct3(x, engine=None, tables=None):
+    """DCT-III: y_k = x_0 + 2 sum_{n=1}^{M-1} x_n cos(pi n (2k+1) / (2M)).
+
+    Pre-twiddle the real input into the hermitian half spectrum whose
+    length-2M irfft carries the DCT-III in its first M samples (the 2M
+    normalization of irfft is folded into the twiddle table).
+    """
     m = x.shape[-1]
-    n = jnp.arange(m)
-    c = x * jnp.exp(-1j * np.pi * n / (2 * m))
-    cz = jnp.zeros(x.shape[:-1] + (2 * m,), dtype=c.dtype).at[..., :m].set(c)
-    y = 2.0 * jnp.fft.fft(cz, axis=-1).real[..., :m] - x[..., 0:1]
-    return y.astype(_rdtype(x))
+    t = _tables(TransformKind.DCT3, m, tables)
+    dt = jnp.complex128 if x.dtype == jnp.float64 else jnp.complex64
+    c = (x * jnp.asarray(t["pre_re"], x.dtype) +
+         1j * (x * jnp.asarray(t["pre_im"], x.dtype))).astype(dt)
+    c = jnp.concatenate(
+        [c, jnp.zeros(x.shape[:-1] + (1,), dtype=dt)], axis=-1)
+    return _irfft(c, 2 * m, engine)[..., :m].astype(_rdtype(x))
 
 
-def dct4(x):
-    """DCT-IV: y_k = 2 sum_n x_n cos(pi (2k+1)(2n+1) / (4M))."""
+def dct4(x, engine=None, tables=None):
+    """DCT-IV: y_k = 2 sum_n x_n cos(pi (2k+1)(2n+1) / (4M)).
+
+    Angle-addition split: with c_n = x_n cos(B_n), s_n = x_n sin(B_n) and
+    B_n = pi(2n+1)/(4M),  y_k = DCT2(c)_k - DST2(s)_{k-1}  (sine term zero
+    at k=0) -- two half-spectrum rffts, no complex intermediates.
+    """
     m = x.shape[-1]
-    n = jnp.arange(m)
-    k = jnp.arange(m)
-    c = x * jnp.exp(-1j * np.pi * n / (2 * m))
-    cz = jnp.zeros(x.shape[:-1] + (2 * m,), dtype=c.dtype).at[..., :m].set(c)
-    f = jnp.fft.fft(cz, axis=-1)[..., :m]
-    y = 2.0 * (jnp.exp(-1j * np.pi * (2 * k + 1) / (4 * m)) * f).real
-    return y.astype(_rdtype(x))
+    t = _tables(TransformKind.DCT4, m, tables)
+    dtype = _rdtype(x)
+    c = (x * jnp.asarray(t["split_c"], dtype=dtype)).astype(dtype)
+    s = (x * jnp.asarray(t["split_s"], dtype=dtype)).astype(dtype)
+    d2 = dct2(c, engine)
+    s2 = dst2(s, engine)
+    zero = jnp.zeros(x.shape[:-1] + (1,), dtype=dtype)
+    return d2 - jnp.concatenate([zero, s2[..., :-1]], axis=-1)
 
 
 # ---------------------------------------------------------------------------
 # DST types
 # ---------------------------------------------------------------------------
 
-def dst1(x):
-    """DST-I: y_k = 2 sum_n x_n sin(pi (k+1)(n+1) / (M+1))."""
+def dst1(x, engine=None, tables=None):
+    """DST-I: y_k = 2 sum_n x_n sin(pi (k+1)(n+1) / (M+1)).
+
+    Odd extension of length 2(M+1); the rfft of a real odd signal is purely
+    imaginary, and bins 1..M carry the DST-I coefficients (negated).
+    """
     m = x.shape[-1]
     zeros = jnp.zeros(x.shape[:-1] + (1,), dtype=x.dtype)
     # odd extension, length 2(M+1): [0, x, 0, -rev(x)]
     z = jnp.concatenate([zeros, x, zeros, -x[..., ::-1]], axis=-1)
-    y = -jnp.fft.fft(z, axis=-1).imag[..., 1:m + 1]
-    return y.astype(_rdtype(x))
+    return (-_rfft(z, engine).imag[..., 1:m + 1]).astype(_rdtype(x))
 
 
-def dst2(x):
+def dst2(x, engine=None, tables=None):
     """DST-II: y_k = 2 sum_n x_n sin(pi (k+1)(2n+1) / (2M))."""
     m = x.shape[-1]
-    z = jnp.concatenate([x, -x[..., ::-1]], axis=-1)  # len 2M
-    k = jnp.arange(1, m + 1)
-    f = jnp.fft.fft(z, axis=-1)
-    # y_k = Im(i * exp(-i pi j/(2M)) F_j) at j = k+1 ... use j index directly
-    fj = jnp.take(f, k, axis=-1)
-    y = (1j * jnp.exp(-1j * np.pi * k / (2 * m)) * fj).real
-    return y.astype(_rdtype(x))
+    t = _tables(TransformKind.DST2, m, tables)
+    z = jnp.concatenate([x, -x[..., ::-1]], axis=-1)    # odd ext, len 2M
+    f = _rfft(z, engine)[..., 1:m + 1]
+    return _post(f.real, f.imag, t["post_a"], t["post_b"], engine, _rdtype(x))
 
 
-def dst3(x):
-    """DST-III: y_k = (-1)^k x_{M-1} + 2 sum_{n=0}^{M-2} x_n sin(pi (n+1)(2k+1)/(2M))."""
+def dst3(x, engine=None, tables=None):
+    """DST-III: y_k = (-1)^k x_{M-1} + 2 sum_{n=0}^{M-2} x_n sin(pi (n+1)(2k+1)/(2M)).
+
+    Mirror of dct3: pre-twiddle into bins 1..M of the half spectrum (bin 0
+    stays zero), irfft, keep the first M samples.
+    """
     m = x.shape[-1]
-    # w_m coefficients: w_0 = 0, w_j = x_{j-1} (j=1..M-1), w_M = x_{M-1}/2
-    zeros = jnp.zeros(x.shape[:-1] + (1,), dtype=x.dtype)
-    w = jnp.concatenate(
-        [zeros, x[..., :-1], 0.5 * x[..., -1:]], axis=-1)  # len M+1
-    jidx = jnp.arange(m + 1)
-    wp = w * jnp.exp(1j * np.pi * jidx / (2 * m))
-    wz = jnp.zeros(x.shape[:-1] + (2 * m,), dtype=wp.dtype).at[..., :m + 1].set(wp)
-    y = 2.0 * (2 * m) * jnp.fft.ifft(wz, axis=-1).imag[..., :m]
-    return y.astype(_rdtype(x))
+    t = _tables(TransformKind.DST3, m, tables)
+    dt = jnp.complex128 if x.dtype == jnp.float64 else jnp.complex64
+    c = (x * jnp.asarray(t["pre_re"], x.dtype) +
+         1j * (x * jnp.asarray(t["pre_im"], x.dtype))).astype(dt)
+    c = jnp.concatenate(
+        [jnp.zeros(x.shape[:-1] + (1,), dtype=dt), c], axis=-1)
+    return _irfft(c, 2 * m, engine)[..., :m].astype(_rdtype(x))
 
 
-def dst4(x):
-    """DST-IV: y_k = 2 sum_n x_n sin(pi (2k+1)(2n+1) / (4M))."""
+def dst4(x, engine=None, tables=None):
+    """DST-IV: y_k = 2 sum_n x_n sin(pi (2k+1)(2n+1) / (4M)).
+
+    Split like dct4:  y_k = DCT2(s)_k + DST2(c)_{k-1}  (sine term zero at
+    k=0) with the same cos/sin input split.
+    """
     m = x.shape[-1]
-    n = jnp.arange(m)
-    k = jnp.arange(m)
-    c = x * jnp.exp(1j * np.pi * n / (2 * m))
-    cz = jnp.zeros(x.shape[:-1] + (2 * m,), dtype=c.dtype).at[..., :m].set(c)
-    f = (2 * m) * jnp.fft.ifft(cz, axis=-1)[..., :m]
-    y = 2.0 * (jnp.exp(1j * np.pi * (2 * k + 1) / (4 * m)) * f).imag
-    return y.astype(_rdtype(x))
+    t = _tables(TransformKind.DST4, m, tables)
+    dtype = _rdtype(x)
+    c = (x * jnp.asarray(t["split_c"], dtype=dtype)).astype(dtype)
+    s = (x * jnp.asarray(t["split_s"], dtype=dtype)).astype(dtype)
+    d2 = dct2(s, engine)
+    s2 = dst2(c, engine)
+    zero = jnp.zeros(x.shape[:-1] + (1,), dtype=dtype)
+    return d2 + jnp.concatenate([zero, s2[..., :-1]], axis=-1)
 
 
 # ---------------------------------------------------------------------------
@@ -149,10 +280,11 @@ def r2r_normfact(kind: TransformKind, m: int) -> float:
     return 1.0 / (2.0 * m)
 
 
-def r2r_forward(x, kind: TransformKind):
-    return _FWD[kind](x)
+def r2r_forward(x, kind: TransformKind, engine=None, tables=None):
+    return _FWD[kind](x, engine=engine, tables=tables)
 
 
-def r2r_backward(y, kind: TransformKind):
-    """Unnormalized inverse; caller multiplies by ``r2r_normfact``."""
-    return _INV[kind](y)
+def r2r_backward(y, kind: TransformKind, engine=None, tables=None):
+    """Unnormalized inverse; the solver folds ``r2r_normfact`` into the
+    Green's function (standalone callers multiply by it themselves)."""
+    return _INV[kind](y, engine=engine, tables=tables)

@@ -1,0 +1,157 @@
+"""Legacy full-complex r2r transforms (the pre-half-spectrum reference).
+
+Every DCT/DST here runs a FULL-length complex FFT on the real (anti)symmetric
+extension -- 2x the FLOPs and bytes of the half-spectrum algorithm now used by
+``repro.core.transforms``.  Kept as a second oracle for the equivalence tests
+and as the "old path" baseline in ``benchmarks/bench_kernels.py``; nothing in
+the solvers calls this module.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .bc import TransformKind
+
+__all__ = [
+    "dct1", "dct2", "dct3", "dct4",
+    "dst1", "dst2", "dst3", "dst4",
+    "r2r_forward", "r2r_backward", "r2r_normfact",
+]
+
+
+def _rdtype(x):
+    return x.dtype
+
+
+# ---------------------------------------------------------------------------
+# DCT types
+# ---------------------------------------------------------------------------
+
+def dct1(x):
+    """DCT-I: y_k = x_0 + (-1)^k x_{M-1} + 2 sum_{n=1}^{M-2} x_n cos(pi k n/(M-1))."""
+    m = x.shape[-1]
+    z = jnp.concatenate([x, x[..., -2:0:-1]], axis=-1)  # even ext, len 2(M-1)
+    y = jnp.fft.fft(z, axis=-1).real[..., :m]
+    return y.astype(_rdtype(x))
+
+
+def dct2(x):
+    """DCT-II: y_k = 2 sum_n x_n cos(pi k (2n+1) / (2M))."""
+    m = x.shape[-1]
+    z = jnp.concatenate([x, x[..., ::-1]], axis=-1)  # len 2M
+    k = jnp.arange(m)
+    tw = jnp.exp(-1j * np.pi * k / (2 * m))
+    y = (tw * jnp.fft.fft(z, axis=-1)[..., :m]).real
+    return y.astype(_rdtype(x))
+
+
+def dct3(x):
+    """DCT-III: y_k = x_0 + 2 sum_{n=1}^{M-1} x_n cos(pi n (2k+1) / (2M))."""
+    m = x.shape[-1]
+    n = jnp.arange(m)
+    c = x * jnp.exp(-1j * np.pi * n / (2 * m))
+    cz = jnp.zeros(x.shape[:-1] + (2 * m,), dtype=c.dtype).at[..., :m].set(c)
+    y = 2.0 * jnp.fft.fft(cz, axis=-1).real[..., :m] - x[..., 0:1]
+    return y.astype(_rdtype(x))
+
+
+def dct4(x):
+    """DCT-IV: y_k = 2 sum_n x_n cos(pi (2k+1)(2n+1) / (4M))."""
+    m = x.shape[-1]
+    n = jnp.arange(m)
+    k = jnp.arange(m)
+    c = x * jnp.exp(-1j * np.pi * n / (2 * m))
+    cz = jnp.zeros(x.shape[:-1] + (2 * m,), dtype=c.dtype).at[..., :m].set(c)
+    f = jnp.fft.fft(cz, axis=-1)[..., :m]
+    y = 2.0 * (jnp.exp(-1j * np.pi * (2 * k + 1) / (4 * m)) * f).real
+    return y.astype(_rdtype(x))
+
+
+# ---------------------------------------------------------------------------
+# DST types
+# ---------------------------------------------------------------------------
+
+def dst1(x):
+    """DST-I: y_k = 2 sum_n x_n sin(pi (k+1)(n+1) / (M+1))."""
+    m = x.shape[-1]
+    zeros = jnp.zeros(x.shape[:-1] + (1,), dtype=x.dtype)
+    # odd extension, length 2(M+1): [0, x, 0, -rev(x)]
+    z = jnp.concatenate([zeros, x, zeros, -x[..., ::-1]], axis=-1)
+    y = -jnp.fft.fft(z, axis=-1).imag[..., 1:m + 1]
+    return y.astype(_rdtype(x))
+
+
+def dst2(x):
+    """DST-II: y_k = 2 sum_n x_n sin(pi (k+1)(2n+1) / (2M))."""
+    m = x.shape[-1]
+    z = jnp.concatenate([x, -x[..., ::-1]], axis=-1)  # len 2M
+    k = jnp.arange(1, m + 1)
+    f = jnp.fft.fft(z, axis=-1)
+    # y_k = Im(i * exp(-i pi j/(2M)) F_j) at j = k+1 ... use j index directly
+    fj = jnp.take(f, k, axis=-1)
+    y = (1j * jnp.exp(-1j * np.pi * k / (2 * m)) * fj).real
+    return y.astype(_rdtype(x))
+
+
+def dst3(x):
+    """DST-III: y_k = (-1)^k x_{M-1} + 2 sum_{n=0}^{M-2} x_n sin(pi (n+1)(2k+1)/(2M))."""
+    m = x.shape[-1]
+    # w_m coefficients: w_0 = 0, w_j = x_{j-1} (j=1..M-1), w_M = x_{M-1}/2
+    zeros = jnp.zeros(x.shape[:-1] + (1,), dtype=x.dtype)
+    w = jnp.concatenate(
+        [zeros, x[..., :-1], 0.5 * x[..., -1:]], axis=-1)  # len M+1
+    jidx = jnp.arange(m + 1)
+    wp = w * jnp.exp(1j * np.pi * jidx / (2 * m))
+    wz = jnp.zeros(x.shape[:-1] + (2 * m,), dtype=wp.dtype).at[..., :m + 1].set(wp)
+    y = 2.0 * (2 * m) * jnp.fft.ifft(wz, axis=-1).imag[..., :m]
+    return y.astype(_rdtype(x))
+
+
+def dst4(x):
+    """DST-IV: y_k = 2 sum_n x_n sin(pi (2k+1)(2n+1) / (4M))."""
+    m = x.shape[-1]
+    n = jnp.arange(m)
+    k = jnp.arange(m)
+    c = x * jnp.exp(1j * np.pi * n / (2 * m))
+    cz = jnp.zeros(x.shape[:-1] + (2 * m,), dtype=c.dtype).at[..., :m].set(c)
+    f = (2 * m) * jnp.fft.ifft(cz, axis=-1)[..., :m]
+    y = 2.0 * (jnp.exp(1j * np.pi * (2 * k + 1) / (4 * m)) * f).imag
+    return y.astype(_rdtype(x))
+
+
+# ---------------------------------------------------------------------------
+# dispatch + normalization
+# ---------------------------------------------------------------------------
+
+_FWD = {
+    TransformKind.DCT1: dct1, TransformKind.DCT2: dct2,
+    TransformKind.DCT3: dct3, TransformKind.DCT4: dct4,
+    TransformKind.DST1: dst1, TransformKind.DST2: dst2,
+    TransformKind.DST3: dst3, TransformKind.DST4: dst4,
+}
+
+_INV = {
+    TransformKind.DCT1: dct1, TransformKind.DCT2: dct3,
+    TransformKind.DCT3: dct2, TransformKind.DCT4: dct4,
+    TransformKind.DST1: dst1, TransformKind.DST2: dst3,
+    TransformKind.DST3: dst2, TransformKind.DST4: dst4,
+}
+
+
+def r2r_normfact(kind: TransformKind, m: int) -> float:
+    """1 / (forward o backward) amplification for size-m transforms."""
+    if kind in (TransformKind.DCT1,):
+        return 1.0 / (2.0 * (m - 1))
+    if kind in (TransformKind.DST1,):
+        return 1.0 / (2.0 * (m + 1))
+    return 1.0 / (2.0 * m)
+
+
+def r2r_forward(x, kind: TransformKind):
+    return _FWD[kind](x)
+
+
+def r2r_backward(y, kind: TransformKind):
+    """Unnormalized inverse; caller multiplies by ``r2r_normfact``."""
+    return _INV[kind](y)

@@ -26,6 +26,7 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core.bc import DataLayout
 from repro.core import green as gr
 from repro.core.comm import CommConfig, topology_switch
+from repro.core.engine import as_engine, build_schedule
 from repro.core.solver import make_plan, build_green, _fwd_1d, _bwd_1d
 
 __all__ = ["DistributedPoissonSolver"]
@@ -64,8 +65,10 @@ class DistributedPoissonSolver:
                  green_kind=gr.GreenKind.CHAT2, *, mesh, axes=("data", "model"),
                  comm: CommConfig = CommConfig(), batch_axis=None,
                  eps_factor: float = 2.0, dtype=jnp.float32,
-                 lazy_green: bool = False):
+                 lazy_green: bool = False, engine="xla"):
         self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor)
+        self.engine = as_engine(engine)
+        self.schedule = build_schedule(self.plan, self.engine)
         self.mesh = mesh
         self.axes = axes
         self.comm = comm
@@ -101,20 +104,30 @@ class DistributedPoissonSolver:
         spec_in[d1], spec_in[d2] = axes[0], axes[1]
         spec_g = [None, None, None]
         spec_g[d0], spec_g[d1] = axes[0], axes[1]
+        # the Green's function never carries the batch axis (vmap broadcasts
+        # it), so its spec is the same with or without batch parallelism
+        self.g_spec = P(*spec_g)
         if batch_axis is not None:
             self.in_spec = P(batch_axis, *spec_in)
-            self.g_spec = P(None, *spec_g) if False else P(*spec_g)
         else:
             self.in_spec = P(*spec_in)
-            self.g_spec = P(*spec_g)
 
         local = self._local_solve
         if batch_axis is not None:
             local = jax.vmap(local, in_axes=(0, None))
-        fn = jax.shard_map(
+        shard_map = getattr(jax, "shard_map", None)
+        if shard_map is None:  # jax < 0.6: experimental namespace
+            from jax.experimental.shard_map import shard_map
+        smap_kw = {}
+        if self.engine.use_pallas:
+            # pallas_call has no replication rule on older jax releases
+            import inspect
+            if "check_rep" in inspect.signature(shard_map).parameters:
+                smap_kw["check_rep"] = False
+        fn = shard_map(
             local, mesh=mesh,
             in_specs=(self.in_spec, self.g_spec),
-            out_specs=self.in_spec)
+            out_specs=self.in_spec, **smap_kw)
         self._jit = jax.jit(fn, donate_argnums=(0,))
         self._green_dev = None
 
@@ -122,33 +135,34 @@ class DistributedPoissonSolver:
 
     def _local_solve(self, x, green):
         plan = self.plan
+        sched = self.schedule
         d0, d1, d2 = plan.order
         dirs = plan.dirs
         a1, a2 = self.axes
         cfg = self.comm
         U, S = self._U, self._S
 
-        x = _fwd_1d(x, dirs[d0])
+        x = _fwd_1d(x, dirs[d0], sched)
         x = _pad_dim(x, d0, self._PS0)
         x = topology_switch(x, a1, d0, d1, cfg)
         x = _crop_dim(x, d1, U[d1])
-        x = _fwd_1d(x, dirs[d1])
+        x = _fwd_1d(x, dirs[d1], sched)
         x = _pad_dim(x, d1, self._PS1)
         x = topology_switch(x, a2, d1, d2, cfg)
         x = _crop_dim(x, d2, U[d2])
-        x = _fwd_1d(x, dirs[d2])
+        x = _fwd_1d(x, dirs[d2], sched)
 
-        x = x * green.astype(x.dtype) if not jnp.iscomplexobj(x) else x * green
+        x = sched.green_multiply(x, green)
 
-        x = _bwd_1d(x, dirs[d2], self.dtype)
+        x = _bwd_1d(x, dirs[d2], sched)
         x = _pad_dim(x, d2, self._PU2)
         x = topology_switch(x, a2, d2, d1, cfg)
         x = _crop_dim(x, d1, S[d1])
-        x = _bwd_1d(x, dirs[d1], self.dtype)
+        x = _bwd_1d(x, dirs[d1], sched)
         x = _pad_dim(x, d1, self._PU1)
         x = topology_switch(x, a1, d1, d0, cfg)
         x = _crop_dim(x, d0, S[d0])
-        x = _bwd_1d(x, dirs[d0], self.dtype)
+        x = _bwd_1d(x, dirs[d0], sched)
         if jnp.iscomplexobj(x):
             x = x.real
         return x.astype(self.dtype)

@@ -3,6 +3,10 @@
 ``interpret=True`` everywhere in this environment: the kernel bodies
 execute on CPU for validation; on a real TPU runtime the same calls lower
 to Mosaic with the declared BlockSpecs.
+
+All wrappers preserve the input dtype (f64 runs fine in interpret mode;
+on a real TPU the solver feeds f32), so ``engine="pallas"`` matches
+``engine="xla"`` to roundoff instead of truncating to f32.
 """
 from __future__ import annotations
 
@@ -16,23 +20,53 @@ from .spectral_scale import spectral_scale
 from .twiddle_pack import twiddle_pack
 
 
+def _rows(shape):
+    r = 1
+    for s in shape[:-1]:
+        r *= s
+    return r
+
+
+def _cdt(real_dtype):
+    return jnp.complex128 if real_dtype == jnp.float64 else jnp.complex64
+
+
 @partial(jax.jit, static_argnames=("scale", "interpret"))
-def green_multiply(fhat, green, scale: float, interpret: bool = True):
-    """Complex (or real) spectral field times real Green + norm factor."""
+def green_multiply(fhat, green, scale: float = 1.0, interpret: bool = True):
+    """Complex (or real) spectral field times real Green + norm factor.
+
+    The only O(N^3) pointwise pass of the solve: one fused kernel instead
+    of separate Green / normalization multiplies.
+    """
     shp = fhat.shape
-    rows = 1
-    for s in shp[:-1]:
-        rows *= s
-    lanes = shp[-1]
-    g2 = green.reshape(rows, lanes).astype(jnp.float32)
+    rows, lanes = _rows(shp), shp[-1]
     if jnp.iscomplexobj(fhat):
-        re = fhat.real.reshape(rows, lanes).astype(jnp.float32)
-        im = fhat.imag.reshape(rows, lanes).astype(jnp.float32)
+        rdt = jnp.float64 if fhat.dtype == jnp.complex128 else jnp.float32
+        g2 = green.reshape(rows, lanes).astype(rdt)
+        re = fhat.real.reshape(rows, lanes).astype(rdt)
+        im = fhat.imag.reshape(rows, lanes).astype(rdt)
         orr, oi = spectral_scale(re, im, g2, scale, interpret=interpret)
         return (orr + 1j * oi).reshape(shp).astype(fhat.dtype)
-    re = fhat.reshape(rows, lanes).astype(jnp.float32)
+    g2 = green.reshape(rows, lanes).astype(fhat.dtype)
+    re = fhat.reshape(rows, lanes)
     orr, _ = spectral_scale(re, re, g2, scale, interpret=interpret)
     return orr.reshape(shp).astype(fhat.dtype)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def post_twiddle(re, im, a, b, interpret: bool = True):
+    """Generic r2r post-twiddle ``y = a * re + b * im`` over the last axis.
+
+    ``re``/``im``: (..., k) real planes of the rfft half spectrum;
+    ``a``/``b``: (k,) twiddle tables (any float dtype; cast to ``re``).
+    """
+    shp = re.shape
+    rows, k = _rows(shp), shp[-1]
+    av = jnp.asarray(a, dtype=re.dtype)
+    bv = jnp.asarray(b, dtype=re.dtype)
+    y = twiddle_pack(re.reshape(rows, k), im.reshape(rows, k).astype(re.dtype),
+                     av, bv, interpret=interpret)
+    return y.reshape(shp)
 
 
 @partial(jax.jit, static_argnames=("interpret",))
@@ -40,25 +74,50 @@ def dct2_post_twiddle(fhat_half, interpret: bool = True):
     """DCT-II from the rfft of the symmetric extension (transforms.dct2
     inner step): y_k = cos_k * re_k + sin_k * im_k over the first M modes."""
     import numpy as np
-    rows, m = fhat_half.shape
-    k = jnp.arange(m)
-    cos = jnp.cos(np.pi * k / (2.0 * m)).astype(jnp.float32)
-    sin = jnp.sin(np.pi * k / (2.0 * m)).astype(jnp.float32)
-    re = fhat_half.real.astype(jnp.float32)
-    im = fhat_half.imag.astype(jnp.float32)
-    # dct2 = Re(e^{-i pi k / 2M} F_k) = cos*re + sin*im
-    return twiddle_pack(re, im, cos, sin, interpret=interpret)
+    m = fhat_half.shape[-1]
+    k = np.arange(m)
+    return post_twiddle(fhat_half.real, fhat_half.imag,
+                        np.cos(np.pi * k / (2.0 * m)),
+                        np.sin(np.pi * k / (2.0 * m)), interpret=interpret)
 
 
 @partial(jax.jit, static_argnames=("inverse", "interpret"))
 def fft1d(x, inverse: bool = False, interpret: bool = True):
     """Batched complex FFT via the Stockham kernel. x: (..., N) complex."""
     shp = x.shape
-    rows = 1
-    for s in shp[:-1]:
-        rows *= s
-    re = x.real.reshape(rows, shp[-1]).astype(jnp.float32)
-    im = x.imag.reshape(rows, shp[-1]).astype(jnp.float32)
+    rows = _rows(shp)
+    rdt = jnp.float64 if x.dtype == jnp.complex128 else jnp.float32
+    re = x.real.reshape(rows, shp[-1]).astype(rdt)
+    im = x.imag.reshape(rows, shp[-1]).astype(rdt)
     orr, oi = fft_stockham(re, im, inverse=inverse, interpret=interpret)
-    return (orr + 1j * oi).reshape(shp).astype(
-        jnp.complex64 if x.dtype != jnp.complex128 else jnp.complex128)
+    return (orr + 1j * oi).reshape(shp).astype(_cdt(rdt))
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def rfft_pallas(x, interpret: bool = True):
+    """rfft of a real (..., N) array via the Stockham kernel: complex FFT
+    with a zero imaginary plane, cropped to the N//2+1 half spectrum."""
+    shp = x.shape
+    n = shp[-1]
+    rows = _rows(shp)
+    re = x.reshape(rows, n)
+    im = jnp.zeros_like(re)
+    orr, oi = fft_stockham(re, im, interpret=interpret)
+    half = n // 2 + 1
+    out = (orr[:, :half] + 1j * oi[:, :half]).astype(_cdt(x.dtype))
+    return out.reshape(shp[:-1] + (half,))
+
+
+@partial(jax.jit, static_argnames=("n", "interpret"))
+def irfft_pallas(y, n: int, interpret: bool = True):
+    """irfft of a hermitian half spectrum (..., N//2+1) -> real (..., N)."""
+    shp = y.shape
+    rows = _rows(shp)
+    y2 = y.reshape(rows, shp[-1])
+    # hermitian extension to the full length-n spectrum
+    tail = jnp.conj(y2[:, n - n // 2 - 1:0:-1])
+    full = jnp.concatenate([y2, tail], axis=-1)
+    rdt = jnp.float64 if y.dtype == jnp.complex128 else jnp.float32
+    orr, _ = fft_stockham(full.real.astype(rdt), full.imag.astype(rdt),
+                          inverse=True, interpret=interpret)
+    return orr.reshape(shp[:-1] + (n,)).astype(rdt)

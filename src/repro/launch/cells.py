@@ -177,7 +177,8 @@ def _build_poisson_cell(shape_name, mesh, comm):
         (CONFIG.n,) * 3, 1.0, CONFIG.bcs, layout=CONFIG.layout,
         green_kind=CONFIG.green, mesh=mesh,
         axes=("data", "model"), comm=comm,
-        batch_axis="pod" if multi else None, lazy_green=True)
+        batch_axis="pod" if multi else None, lazy_green=True,
+        engine=CONFIG.engine)
     batch = CONFIG.batch if multi else None
     f_sds = jax.ShapeDtypeStruct(
         solver.padded_input_shape(batch), jnp.float32,

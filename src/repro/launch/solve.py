@@ -26,6 +26,8 @@ def main(argv=None):
     ap.add_argument("--comm", default="a2a",
                     choices=["a2a", "pipelined", "fused"])
     ap.add_argument("--green", default="chat2")
+    ap.add_argument("--engine", default="xla", choices=["xla", "pallas"],
+                    help="transform engine: pure XLA or the Pallas kernels")
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args(argv)
 
@@ -55,7 +57,8 @@ def main(argv=None):
     mesh = jax.make_mesh((args.p1, args.p2), ("data", "model"))
     solver = DistributedPoissonSolver(
         (args.n,) * 3, 1.0, bcs, layout=layout, green_kind=args.green,
-        mesh=mesh, comm=CommConfig(strategy=args.comm), dtype=jnp.float64)
+        mesh=mesh, comm=CommConfig(strategy=args.comm), dtype=jnp.float64,
+        engine=args.engine)
 
     # rhs: the paper's validation field for the chosen BCs
     import sys
@@ -83,7 +86,7 @@ def main(argv=None):
     err = float(np.max(np.abs(np.asarray(u) - sol)))
     thr = rhs.size * 8 / dt / 1e6 / n_dev
     print(f"[solve] n={args.n}^3 grid, ({args.p1}x{args.p2}) pencils, "
-          f"comm={args.comm}: {dt*1e3:.1f} ms/solve, "
+          f"comm={args.comm}, engine={args.engine}: {dt*1e3:.1f} ms/solve, "
           f"E_inf={err:.3e}, throughput {thr:.1f} MB/s/rank")
     return err
 

@@ -1,0 +1,76 @@
+"""Tiny deterministic stand-in for ``hypothesis`` when it isn't installed.
+
+Provides just the surface the test suite uses -- ``given``, ``settings`` and
+the ``integers`` / ``sampled_from`` / ``floats`` strategies -- by drawing a
+fixed number of seeded pseudo-random examples per test.  Not a property-based
+testing engine (no shrinking, no database), but it keeps the property tests
+exercising real values everywhere instead of skipping whole modules.
+"""
+from __future__ import annotations
+
+
+import random
+
+DEFAULT_EXAMPLES = 25
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+class strategies:  # mirrors `from hypothesis import strategies as st`
+    @staticmethod
+    def integers(min_value=None, max_value=None):
+        lo = -2 ** 31 if min_value is None else min_value
+        hi = 2 ** 31 - 1 if max_value is None else max_value
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    @staticmethod
+    def sampled_from(elements):
+        elements = list(elements)
+        return _Strategy(lambda rng: rng.choice(elements))
+
+    @staticmethod
+    def floats(min_value=0.0, max_value=1.0, **_kw):
+        return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+    @staticmethod
+    def booleans():
+        return _Strategy(lambda rng: rng.random() < 0.5)
+
+
+def settings(max_examples=DEFAULT_EXAMPLES, deadline=None, **_kw):
+    def wrap(fn):
+        fn._shim_max_examples = max_examples
+        return fn
+    return wrap
+
+
+def given(**strats):
+    def wrap(fn):
+        # NB: deliberately not functools.wraps -- pytest must see a
+        # zero-argument test, not the wrapped signature (whose parameters
+        # it would resolve as fixtures).
+        def runner():
+            # @settings is applied outermost at every call site, so the
+            # attribute lands on `runner`; fall back to the inner fn for
+            # the (unused here) given-outside-settings order.
+            n = getattr(runner, "_shim_max_examples",
+                        getattr(fn, "_shim_max_examples", DEFAULT_EXAMPLES))
+            rng = random.Random(f"{fn.__module__}.{fn.__name__}")
+            for i in range(n):
+                drawn = {k: s.example(rng) for k, s in strats.items()}
+                try:
+                    fn(**drawn)
+                except AssertionError as e:
+                    raise AssertionError(
+                        f"falsifying example (shim, draw {i}): {drawn}") from e
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        runner.__module__ = fn.__module__
+        return runner
+    return wrap

@@ -81,3 +81,44 @@ def test_green_multiply_complex_matches_direct():
     got = ops.green_multiply(jnp.asarray(f), jnp.asarray(g), 0.25)
     np.testing.assert_allclose(np.asarray(got), f * g * 0.25, rtol=2e-6,
                                atol=1e-6)
+
+
+def test_green_multiply_f64_preserves_precision():
+    rng = np.random.default_rng(8)
+    f = (rng.standard_normal((3, 64)) + 1j * rng.standard_normal((3, 64)))
+    g = rng.standard_normal((3, 64))
+    got = ops.green_multiply(jnp.asarray(f), jnp.asarray(g))
+    assert np.asarray(got).dtype == np.complex128
+    np.testing.assert_allclose(np.asarray(got), f * g, rtol=1e-14, atol=1e-14)
+
+
+@pytest.mark.parametrize("n", [16, 64, 256])
+def test_rfft_pallas_matches_jnp(n):
+    rng = np.random.default_rng(6)
+    x = rng.standard_normal((5, n))
+    got = ops.rfft_pallas(jnp.asarray(x))
+    want = np.fft.rfft(x, axis=-1)
+    np.testing.assert_allclose(np.asarray(got), want, rtol=1e-10,
+                               atol=1e-10 * np.sqrt(n))
+
+
+@pytest.mark.parametrize("n", [16, 128])
+def test_irfft_pallas_roundtrip(n):
+    rng = np.random.default_rng(7)
+    x = rng.standard_normal((4, n))
+    half = ops.rfft_pallas(jnp.asarray(x))
+    back = ops.irfft_pallas(half, n)
+    np.testing.assert_allclose(np.asarray(back), x, rtol=1e-10, atol=1e-10)
+    want = np.fft.irfft(np.asarray(half), n=n, axis=-1)
+    np.testing.assert_allclose(np.asarray(back), want, rtol=1e-10, atol=1e-10)
+
+
+def test_post_twiddle_matches_reference():
+    rng = np.random.default_rng(9)
+    re = rng.standard_normal((7, 33))
+    im = rng.standard_normal((7, 33))
+    a = np.cos(np.linspace(0, 2, 33))
+    b = -np.sin(np.linspace(0, 2, 33))
+    got = ops.post_twiddle(jnp.asarray(re), jnp.asarray(im), a, b)
+    np.testing.assert_allclose(np.asarray(got), a * re + b * im,
+                               rtol=1e-12, atol=1e-12)

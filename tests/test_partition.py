@@ -1,6 +1,10 @@
 """Properties of the Appendix-A invertible balanced partition."""
 import numpy as np
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI images without hypothesis: deterministic local shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core import partition as pt
 

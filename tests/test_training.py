@@ -5,7 +5,11 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # CI images without hypothesis: deterministic local shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.ckpt import checkpoint as ck
 from repro.configs import get_smoke
