@@ -1,6 +1,8 @@
-"""Paper Table II / Fig 11: comm-strategy comparison (a2a / pipelined /
-fused) on an 8-device pencil grid -- the accFFT-comparison analogue: the
-same forward+backward FFT workload under each strategy.
+"""Paper Table II / Fig 11: comm-strategy comparison on an 8-device pencil
+grid -- the accFFT-comparison analogue: the same forward+backward FFT
+workload under every (strategy, n_chunks) pair, plus the ``comm="auto"``
+autotuner pick.  The full sweep lands in ``BENCH_comm.json`` (the table
+rendered in EXPERIMENTS.md §Comm strategies).
 
 Runs in a subprocess with 8 host devices so the main process keeps 1.
 """
@@ -11,10 +13,14 @@ import os
 import subprocess
 import sys
 
+SWEEP = [("a2a", 1), ("fused", 1),
+         ("pipelined", 2), ("pipelined", 4), ("pipelined", 8),
+         ("overlap", 2), ("overlap", 4), ("overlap", 8)]
+
 _SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import json, time
+import json, sys, time
 import numpy as np
 import jax, jax.numpy as jnp
 from repro.core.bc import BCType
@@ -22,40 +28,73 @@ from repro.core.comm import CommConfig
 from repro.distributed.pencil import DistributedPoissonSolver
 
 n = int(os.environ.get("BENCH_N", "64"))
+reps = int(os.environ.get("BENCH_REPS", "5"))
+sweep = json.loads(sys.argv[1])
 P = (BCType.PER, BCType.PER)
 mesh = jax.make_mesh((2, 4), ("data", "model"))
 rng = np.random.default_rng(0)
+f = rng.standard_normal((n, n, n)).astype(np.float32)
 rows = []
-for strategy in ("a2a", "pipelined", "fused"):
+
+def timed(comm):
     s = DistributedPoissonSolver((n, n, n), 1.0, (P, P, P), mesh=mesh,
-                                 comm=CommConfig(strategy=strategy,
-                                                 n_chunks=2))
-    f = rng.standard_normal((n, n, n)).astype(np.float32)
+                                 comm=comm)
     u = s.solve(f); u.block_until_ready()
     t0 = time.time()
-    reps = 5
     for _ in range(reps):
         u = s.solve(f); u.block_until_ready()
-    dt = (time.time() - t0) / reps
-    thr = f.nbytes / dt / 8 / 1e6   # MB/s per rank
-    rows.append({"strategy": strategy, "us": dt * 1e6,
-                 "mbps_rank": thr})
-print(json.dumps(rows))
+    return s, (time.time() - t0) / reps
+
+for strategy, nc in sweep:
+    s, dt = timed(CommConfig(strategy=strategy, n_chunks=nc))
+    rows.append({"strategy": strategy, "n_chunks": nc, "us": dt * 1e6,
+                 "mbps_rank": f.nbytes / dt / 8 / 1e6})
+
+s, dt = timed("auto")
+rows.append({"strategy": "auto", "n_chunks": s.comm.n_chunks,
+             "picked": f"{s.comm.strategy}:{s.comm.n_chunks}",
+             "us": dt * 1e6, "mbps_rank": f.nbytes / dt / 8 / 1e6,
+             "sweep_us": {k: v * 1e6 for k, v in
+                          getattr(s, "autotune_results", {}).items()}})
+print("BENCH_JSON " + json.dumps(rows))
 """
 
 
-def run(quick=True):
-    env = dict(os.environ, PYTHONPATH="src", BENCH_N="48" if quick else "96")
+def _sweep(n, reps, sweep):
+    env = dict(os.environ, PYTHONPATH="src", BENCH_N=str(n),
+               BENCH_REPS=str(reps))
     env.pop("XLA_FLAGS", None)
-    out = subprocess.run([sys.executable, "-c", _SCRIPT],
-                         capture_output=True, text=True, env=env)
+    env.pop("REPRO_COMM_CACHE", None)  # the sweep must run live
+    out = subprocess.run([sys.executable, "-c", _SCRIPT, json.dumps(sweep)],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
     if out.returncode != 0:
-        return [("tab2_comm_error", 0.0, out.stderr[-200:])]
-    rows = json.loads(out.stdout.strip().splitlines()[-1])
-    return [(f"tab2_comm_{r['strategy']}", r["us"],
-             f"{r['mbps_rank']:.1f}MB/s/rank") for r in rows]
+        raise RuntimeError(out.stderr[-2000:])
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("BENCH_JSON ")][-1]
+    return json.loads(line[len("BENCH_JSON "):])
+
+
+def run(quick=True):
+    n = 48 if quick else 96
+    sweep = SWEEP[:6] if quick else SWEEP
+    try:
+        rows = _sweep(n, 3 if quick else 5, sweep)
+    except RuntimeError as e:
+        return [("tab2_comm_error", 0.0, str(e)[-200:])]
+    payload = {"mode": "quick" if quick else "full", "grid": n,
+               "mesh": [2, 4], "bcs": "per", "rows": rows}
+    fname = "BENCH_comm.quick.json" if quick else "BENCH_comm.json"
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, fname), "w") as fh:
+        json.dump(payload, fh, indent=2)
+    return [(f"tab2_comm_{r['strategy']}_c{r['n_chunks']}", r["us"],
+             f"{r['mbps_rank']:.1f}MB/s/rank" +
+             (f";picked={r['picked']}" if "picked" in r else ""))
+            for r in rows]
 
 
 if __name__ == "__main__":
     from common import emit
-    emit(run())
+    emit(run(quick="--full" not in sys.argv))

@@ -18,6 +18,16 @@ class PoissonArchConfig:
     green: str
     batch: int = 1              # fields solved per step (data parallel)
     engine: str = "xla"         # transform engine: "xla" | "pallas"
+    # topology-switch communication (DESIGN.md #2), applied whenever the
+    # launcher passes the stock default strategy:
+    # "a2a" | "pipelined" | "fused" | "overlap" | "auto" (plan-time tuner)
+    comm: str = "a2a"
+    comm_chunks: int = 2        # pipelined/overlap granularity (n_batch)
+    # autotuner cache knobs (comm="auto"): winners are cached in-process per
+    # (shape, bcs, layout, mesh) key; a non-empty path (or $REPRO_COMM_CACHE)
+    # persists them as JSON so later processes skip the timing sweep
+    comm_autotune_cache: str = ""
+    comm_autotune_max_chunks: int = 4   # sweep n_chunks in {2, 4, ...}
 
 
 U = (BCType.UNB, BCType.UNB)

@@ -5,70 +5,174 @@ the local block splits its (previously full) active axis across the ranks of
 ONE mesh axis and gathers the next axis -- flups' sub-communicator scoping
 maps 1:1 onto named mesh axes.
 
-Three strategies, adapted from the paper's MPI designs (see DESIGN.md #2):
+Each strategy is a ``CommStrategy`` class (see DESIGN.md #2); all are
+numerically identical (asserted in tests) and differ only in the HLO they
+emit, which is what the §Perf iteration studies:
 
-* ``a2a``      -- one ``lax.all_to_all`` on the whole block, followed by an
-                  explicit contiguous materialization (the analogue of the
-                  pack/unpack into dedicated communication buffers around
-                  ``MPI_Ialltoallv``).  Simple, fully synchronous.
-* ``pipelined``-- the paper's ``nb``: the block is cut into ``n_chunks``
-                  along an uninvolved axis and each chunk is exchanged by its
-                  own all-to-all; chunk k's local shuffle is independent of
-                  chunk k+1's collective, exposing compute/comm overlap to
-                  the scheduler (the role of n_batch / MPI_Testsome).
-* ``fused``    -- the paper's ``isr``: no explicit pre/post packing at all;
-                  the all-to-all output keeps its natural (strided) layout
-                  and downstream ops fold the reorder into their own
-                  indexing, i.e. the MPI_Datatype role is played by XLA
-                  layout assignment.
+* ``a2a``       -- one ``lax.all_to_all`` on the whole block, followed by an
+                   explicit contiguous materialization (the analogue of the
+                   pack/unpack into dedicated communication buffers around
+                   ``MPI_Ialltoallv``).  Simple, fully synchronous.
+* ``pipelined`` -- the paper's ``nb``: the block is cut into ``n_chunks``
+                   along an uninvolved axis and each chunk is exchanged by
+                   its own all-to-all; chunk k's local shuffle is independent
+                   of chunk k+1's collective, exposing comm/comm overlap to
+                   the scheduler (the role of n_batch / MPI_Testsome).  The
+                   neighboring transforms stay monolithic.
+* ``fused``     -- the paper's ``isr``: no explicit pre/post packing at all;
+                   the all-to-all output keeps its natural (strided) layout
+                   and downstream ops fold the reorder into their own
+                   indexing, i.e. the MPI_Datatype role is played by XLA
+                   layout assignment.
+* ``overlap``   -- software-pipelined switch+transform stage: the collective
+                   for chunk k+1 is issued BEFORE the next direction's 1-D
+                   transform of chunk k, so transform compute genuinely
+                   overlaps collective latency (flups' non-blocking variants
+                   overlapping shuffle with MPI progress).  Requires the
+                   caller to hand the per-chunk continuation to ``stage``
+                   (the ``TransformSchedule.fwd_chunk``/``bwd_chunk`` API).
 
-All strategies are numerically identical (asserted in tests); they differ
-in the HLO they emit, which is what the §Perf iteration studies.
+On top, ``autotune_comm`` is the analogue of flups' switchsort self-tuning:
+it times candidate (strategy, n_chunks) pairs for the actual plan shapes and
+mesh and caches the winner per plan/mesh key (in-memory, plus an optional
+JSON file given by ``cache_path`` / $REPRO_COMM_CACHE).
 """
 from __future__ import annotations
 
+import json
+import os
+import threading
+import warnings
 from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 
-STRATEGIES = ("a2a", "pipelined", "fused")
+STRATEGIES = ("a2a", "pipelined", "fused", "overlap")
+
+__all__ = [
+    "STRATEGIES", "CommConfig", "CommStrategy", "as_comm", "make_strategy",
+    "topology_switch", "pad_axis", "crop_axis",
+    "autotune_comm", "autotune_candidates",
+    "clear_autotune_cache", "all_reduce_mean",
+]
 
 
 @dataclass(frozen=True)
 class CommConfig:
     strategy: str = "a2a"
-    n_chunks: int = 2          # pipelined granularity (the paper's n_batch)
+    n_chunks: int = 2          # pipelined/overlap granularity (paper n_batch)
 
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
+        assert self.n_chunks >= 1, self.n_chunks
 
+
+def as_comm(comm) -> CommConfig:
+    """Accept ``CommConfig`` / strategy name / None (``"auto"`` is resolved
+    by the solver via ``autotune_comm`` before this point)."""
+    if comm is None:
+        return CommConfig()
+    if isinstance(comm, CommConfig):
+        return comm
+    return CommConfig(strategy=str(comm))
+
+
+# ---------------------------------------------------------------------------
+# chunking helpers
+# ---------------------------------------------------------------------------
 
 def _uninvolved_axis(ndim: int, split_axis: int, concat_axis: int) -> int:
     for ax in range(ndim - 1, -1, -1):
         if ax not in (split_axis, concat_axis):
             return ax
-    raise ValueError("need >= 3 axes for the pipelined strategy")
+    raise ValueError("need >= 3 axes for a chunked strategy")
 
 
-def topology_switch(x, axis_name, split_axis: int, concat_axis: int,
-                    cfg: CommConfig):
-    """Distributed transpose: split ``split_axis`` over ``axis_name`` ranks,
-    gather ``concat_axis``.  Must run inside shard_map."""
-    if cfg.strategy == "pipelined" and cfg.n_chunks > 1:
-        ax = _uninvolved_axis(x.ndim, split_axis, concat_axis)
-        if x.shape[ax] % cfg.n_chunks == 0:
-            chunks = jnp.split(x, cfg.n_chunks, axis=ax)
-            outs = [
-                lax.all_to_all(c, axis_name, split_axis, concat_axis,
-                               tiled=True)
-                for c in chunks
-            ]
-            return jnp.concatenate(outs, axis=ax)
-        # fall through to a single collective when the axis does not divide
-    y = lax.all_to_all(x, axis_name, split_axis, concat_axis, tiled=True)
-    if cfg.strategy == "a2a":
+_WARNED: set = set()
+
+
+def _warn_once(msg: str):
+    if msg not in _WARNED:
+        _WARNED.add(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=4)
+
+
+def _split_chunks(x, ax: int, n: int):
+    """Cut ``x`` into ``n`` equal chunks along ``ax``, zero-padding the axis
+    to the next multiple when it does not divide (warned once per shape --
+    the seed silently fell back to a single collective here)."""
+    ln = x.shape[ax]
+    if ln % n:
+        target = -(-ln // n) * n
+        _warn_once(
+            f"comm: chunk axis {ax} (length {ln}) does not divide into "
+            f"{n} chunks; zero-padding to {target} (cropped after the "
+            f"switch)")
+        x = pad_axis(x, ax, target)
+    return jnp.split(x, n, axis=ax), ln
+
+
+def pad_axis(x, ax: int, target: int):
+    """Zero-pad ``ax`` up to ``target`` (no-op when already there)."""
+    if x.shape[ax] == target:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[ax] = (0, target - x.shape[ax])
+    return jnp.pad(x, pad)
+
+
+def crop_axis(x, ax: int, ln: int):
+    """Slice ``ax`` down to ``ln`` (no-op when already there)."""
+    if x.shape[ax] == ln:
+        return x
+    sl = [slice(None)] * x.ndim
+    sl[ax] = slice(0, ln)
+    return x[tuple(sl)]
+
+
+def _a2a(x, axis_name, split_axis, concat_axis):
+    return lax.all_to_all(x, axis_name, split_axis, concat_axis, tiled=True)
+
+
+# ---------------------------------------------------------------------------
+# strategies
+# ---------------------------------------------------------------------------
+
+class CommStrategy:
+    """One topology-switch execution policy.
+
+    ``stage(x, axis_name, split_axis, concat_axis, post=...)`` performs the
+    switch and then applies ``post`` -- the crop + next direction's 1-D
+    transform continuation handed down by the solver.  Monolithic strategies
+    run ``post`` on the whole switched block; ``overlap`` interleaves it
+    chunk-wise with the collectives.  ``switch`` is the plain transpose
+    (``post=None``), the API the MoE/attention layers use.
+    """
+
+    name: str = "?"
+
+    def __init__(self, n_chunks: int = 1):
+        self.n_chunks = max(int(n_chunks), 1)
+
+    # -- to be overridden -------------------------------------------------
+    def _switch(self, x, axis_name, split_axis, concat_axis):
+        raise NotImplementedError
+
+    # -- shared surface ----------------------------------------------------
+    def switch(self, x, axis_name, split_axis, concat_axis):
+        return self.stage(x, axis_name, split_axis, concat_axis, post=None)
+
+    def stage(self, x, axis_name, split_axis, concat_axis, post=None):
+        y = self._switch(x, axis_name, split_axis, concat_axis)
+        return post(y) if post is not None else y
+
+
+class A2AStrategy(CommStrategy):
+    name = "a2a"
+
+    def _switch(self, x, axis_name, split_axis, concat_axis):
+        y = _a2a(x, axis_name, split_axis, concat_axis)
         # explicit pack/unpack materialization: force a contiguous copy so
         # the collective is surrounded by dedicated buffer ops (flups a2a)
         try:
@@ -78,7 +182,180 @@ def topology_switch(x, axis_name, split_axis: int, concat_axis: int,
             # under the multi-pod vmap); the barrier is a scheduling hint
             # only, so dropping it preserves semantics
             pass
-    return y
+        return y
+
+
+class FusedStrategy(CommStrategy):
+    name = "fused"
+
+    def _switch(self, x, axis_name, split_axis, concat_axis):
+        return _a2a(x, axis_name, split_axis, concat_axis)
+
+
+class PipelinedStrategy(CommStrategy):
+    """Chunked collectives only; neighboring transforms stay monolithic."""
+
+    name = "pipelined"
+
+    def _switch(self, x, axis_name, split_axis, concat_axis):
+        if self.n_chunks <= 1:
+            return _a2a(x, axis_name, split_axis, concat_axis)
+        ax = _uninvolved_axis(x.ndim, split_axis, concat_axis)
+        chunks, ln = _split_chunks(x, ax, self.n_chunks)
+        outs = [_a2a(c, axis_name, split_axis, concat_axis) for c in chunks]
+        return crop_axis(jnp.concatenate(outs, axis=ax), ax, ln)
+
+
+class OverlapStrategy(CommStrategy):
+    """Software-pipelined switch: collective k+1 is issued before the
+    post-stage (next direction's transform) of chunk k, so the transform of
+    one chunk overlaps the wire time of the next."""
+
+    name = "overlap"
+
+    def _switch(self, x, axis_name, split_axis, concat_axis):
+        # plain transpose (no continuation): same wire pattern as pipelined
+        return PipelinedStrategy(self.n_chunks)._switch(
+            x, axis_name, split_axis, concat_axis)
+
+    def stage(self, x, axis_name, split_axis, concat_axis, post=None):
+        if post is None or self.n_chunks <= 1:
+            y = self._switch(x, axis_name, split_axis, concat_axis)
+            return post(y) if post is not None else y
+        ax = _uninvolved_axis(x.ndim, split_axis, concat_axis)
+        chunks, ln = _split_chunks(x, ax, self.n_chunks)
+        outs = []
+        inflight = _a2a(chunks[0], axis_name, split_axis, concat_axis)
+        for k in range(1, self.n_chunks):
+            nxt = _a2a(chunks[k], axis_name, split_axis, concat_axis)
+            outs.append(post(inflight))    # overlaps chunk k's wire time
+            inflight = nxt
+        outs.append(post(inflight))
+        return crop_axis(jnp.concatenate(outs, axis=ax), ax, ln)
+
+
+_STRATEGY_CLASSES = {
+    cls.name: cls
+    for cls in (A2AStrategy, PipelinedStrategy, FusedStrategy,
+                OverlapStrategy)
+}
+
+
+def make_strategy(cfg: CommConfig) -> CommStrategy:
+    return _STRATEGY_CLASSES[cfg.strategy](cfg.n_chunks)
+
+
+def topology_switch(x, axis_name, split_axis: int, concat_axis: int,
+                    cfg: CommConfig):
+    """Distributed transpose: split ``split_axis`` over ``axis_name`` ranks,
+    gather ``concat_axis``.  Must run inside shard_map."""
+    return make_strategy(cfg).switch(x, axis_name, split_axis, concat_axis)
+
+
+# ---------------------------------------------------------------------------
+# plan-time autotuner (flups switchsort analogue)
+# ---------------------------------------------------------------------------
+
+_AUTOTUNE_CACHE: dict = {}
+_AUTOTUNE_LOCK = threading.Lock()
+
+
+def autotune_candidates(max_chunks: int = 4):
+    """Default (strategy, n_chunks) sweep: monolithic strategies once,
+    chunked strategies at 2, 4, ... up to ``max_chunks``."""
+    cands = [CommConfig("a2a", 1), CommConfig("fused", 1)]
+    nc = 2
+    while nc <= max_chunks:
+        cands.append(CommConfig("pipelined", nc))
+        cands.append(CommConfig("overlap", nc))
+        nc *= 2
+    return tuple(cands)
+
+
+def clear_autotune_cache():
+    with _AUTOTUNE_LOCK:
+        _AUTOTUNE_CACHE.clear()
+
+
+def _cache_file_load(path: str) -> dict:
+    try:
+        with open(path) as fh:
+            return json.load(fh)
+    except (OSError, ValueError):
+        return {}
+
+
+def _cache_file_store(path: str, key: str, cfg: CommConfig, timings: dict):
+    data = _cache_file_load(path)
+    data[key] = {"strategy": cfg.strategy, "n_chunks": cfg.n_chunks,
+                 "timings_us": {k: round(v * 1e6, 1)
+                                for k, v in timings.items()}}
+    try:
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as fh:
+            json.dump(data, fh, indent=1, sort_keys=True)
+    except OSError as e:            # cache is best-effort, never fatal
+        _warn_once(f"comm: cannot persist autotune cache to {path}: {e}")
+
+
+def autotune_comm(key, time_fn, candidates=None, cache_path=None,
+                  results=None) -> CommConfig:
+    """Pick the fastest (strategy, n_chunks) pair for one plan/mesh key.
+
+    ``time_fn(cfg) -> seconds`` lowers+times one solve under ``cfg`` (the
+    solver provides it); the winner is cached in-memory per ``key`` and,
+    when ``cache_path`` (default $REPRO_COMM_CACHE) is set, persisted as
+    JSON so later processes skip the sweep.  ``results``, when a dict, is
+    filled with the per-candidate timings of a live sweep (empty on a cache
+    hit).  A candidate that raises is skipped; if every candidate fails the
+    default ``a2a`` is returned.
+    """
+    if candidates is None:
+        candidates = autotune_candidates()
+    # the candidate grid is part of the identity: widening the sweep (e.g.
+    # raising comm_autotune_max_chunks) must invalidate the cached winner
+    labels = tuple(f"{c.strategy}:{c.n_chunks}" for c in candidates)
+    key = repr((key, labels))
+    if cache_path is None:
+        cache_path = os.environ.get("REPRO_COMM_CACHE") or None
+    with _AUTOTUNE_LOCK:
+        hit = _AUTOTUNE_CACHE.get(key)
+    if hit is not None:
+        return hit
+    if cache_path:
+        entry = _cache_file_load(cache_path).get(key)
+        if entry is not None:
+            try:
+                cfg = CommConfig(entry["strategy"], int(entry["n_chunks"]))
+            except (KeyError, TypeError, ValueError, AssertionError):
+                # malformed / older-schema entry: fall through to a live
+                # sweep (the cache is best-effort, never fatal)
+                cfg = None
+            if cfg is not None:
+                with _AUTOTUNE_LOCK:
+                    _AUTOTUNE_CACHE[key] = cfg
+                return cfg
+
+    timings: dict = {}
+    for cfg, label in zip(candidates, labels):
+        try:
+            timings[label] = float(time_fn(cfg))
+        except Exception as e:      # noqa: BLE001 -- candidate may not lower
+            _warn_once(f"comm: autotune candidate {label} failed: {e}")
+    if results is not None:
+        results.update(timings)
+    if not timings:
+        return CommConfig()
+    best_label = min(timings, key=timings.get)
+    strategy, nc = best_label.split(":")
+    best = CommConfig(strategy, int(nc))
+    with _AUTOTUNE_LOCK:
+        _AUTOTUNE_CACHE[key] = best
+    if cache_path:
+        _cache_file_store(cache_path, key, best, timings)
+    return best
 
 
 def all_reduce_mean(x, axis_name):

@@ -18,6 +18,12 @@ normalization of every backward r2r transform.  That normalization is folded
 into the Green's function by ``build_green`` (one multiply for the whole
 solve), so the backward pass emits ZERO standalone normalization multiplies
 -- see tests/test_engine.py which counts them in the jaxpr.
+
+The schedule is also the distributed solver's STAGE API: ``fwd_chunk`` /
+``bwd_chunk`` apply one direction's 1-D transform to the full local block or
+to any chunk of it cut along an uninvolved axis -- the unit the ``overlap``
+comm strategy interleaves with the per-chunk collectives of a topology
+switch (see ``repro.core.comm``).
 """
 from __future__ import annotations
 
@@ -26,7 +32,8 @@ from dataclasses import dataclass
 import jax.numpy as jnp
 
 __all__ = ["TransformEngine", "TransformSchedule", "as_engine",
-           "build_schedule", "folded_normfact", "ENGINES"]
+           "build_schedule", "folded_normfact", "fwd_1d", "bwd_1d",
+           "ENGINES"]
 
 ENGINES = ("xla", "pallas")
 
@@ -61,6 +68,66 @@ def as_engine(engine) -> TransformEngine:
     return TransformEngine(str(engine))
 
 
+# ---------------------------------------------------------------------------
+# per-direction 1-D ops (jnp, last-axis via moveaxis)
+# ---------------------------------------------------------------------------
+
+def fwd_1d(x, p, sched=None):
+    """Forward 1-D transform of direction ``p`` (a ``Plan1D``), applied to
+    the whole block or to any chunk cut along an axis other than ``p.dim``.
+    """
+    # measured (EXPERIMENTS.md section Perf, flups cell): transforming along
+    # the native axis (jnp.fft axis=d) REGRESSES bytes by 11% -- XLA
+    # transposes internally for non-minor FFT axes and loses the fusion of
+    # the explicit moveaxis (a no-op when d is already last). Keep moveaxis.
+    from . import transforms as tr
+    engine = sched.engine if sched is not None else None
+    x = jnp.moveaxis(x, p.dim, -1)
+    if p.flip:
+        x = x[..., ::-1]
+    x = x[..., p.in_start:p.in_start + p.n_in]
+    if p.n_fft > p.n_in:
+        pad = [(0, 0)] * (x.ndim - 1) + [(0, p.n_fft - p.n_in)]
+        x = jnp.pad(x, pad)
+    if p.category in ("sym", "semi"):
+        tables = sched.fwd_tables[p.dim] if sched is not None else None
+        y = tr.r2r_forward(x, p.kind, engine=engine, tables=tables)
+    elif p.dft == "r2c":
+        y = tr._rfft(x, engine)
+    else:
+        y = tr._cfft(x, engine)
+    return jnp.moveaxis(y, -1, p.dim)
+
+
+def bwd_1d(y, p, sched=None):
+    """Inverse 1-D transform of direction ``p``; chunk-safe like ``fwd_1d``.
+    """
+    # NOTE: no normalization multiply here -- every direction's normfact is
+    # folded into the Green's function at plan time (build_green).
+    from . import transforms as tr
+    engine = sched.engine if sched is not None else None
+    y = jnp.moveaxis(y, p.dim, -1)
+    if p.category in ("sym", "semi"):
+        tables = sched.bwd_tables[p.dim] if sched is not None else None
+        x = tr.r2r_backward(y, p.kind, engine=engine, tables=tables)
+    elif p.dft == "r2c":
+        x = tr._irfft(y, p.n_fft, engine)
+    else:
+        x = tr._cfft(y, engine, inverse=True)
+    x = x[..., :p.n_in]
+    # place into the user-sized axis
+    left = p.in_start
+    right = p.n_pts - p.in_start - p.n_in - (1 if p.per_dup else 0)
+    if left or right:
+        pad = [(0, 0)] * (x.ndim - 1) + [(left, right)]
+        x = jnp.pad(x, pad)
+    if p.per_dup:  # node-periodic: duplicate the first point at the end
+        x = jnp.concatenate([x, x[..., :1]], axis=-1)
+    if p.flip:
+        x = x[..., ::-1]
+    return jnp.moveaxis(x, -1, p.dim)
+
+
 @dataclass(frozen=True)
 class TransformSchedule:
     """Plan-time constants for one solve: per-direction twiddle tables and
@@ -70,6 +137,18 @@ class TransformSchedule:
     fwd_tables: tuple    # per logical dim: twiddle dict for the forward kind
     bwd_tables: tuple    # per logical dim: twiddle dict for the inverse kind
     norm: float          # prod of r2r normfacts, folded into the Green
+    dirs: tuple = ()     # per logical dim: the plan's Plan1D
+
+    # -- fused transform+switch stage API (chunk-safe by construction) -----
+
+    def fwd_chunk(self, x, d: int):
+        """Forward 1-D transform of logical direction ``d`` on a full block
+        or an uninvolved-axis chunk (the overlap strategy's stage unit)."""
+        return fwd_1d(x, self.dirs[d], self)
+
+    def bwd_chunk(self, x, d: int):
+        """Inverse 1-D transform of logical direction ``d``; chunk-safe."""
+        return bwd_1d(x, self.dirs[d], self)
 
     def green_multiply(self, yhat, green):
         """The fused pointwise pass (Green x normalization in one multiply)."""
@@ -107,4 +186,4 @@ def build_schedule(plan, engine=None) -> TransformSchedule:
             fwd.append(tr.twiddle_tables(p.kind, p.n_fft))
             bwd.append(tr.twiddle_tables(INVERSE_KIND[p.kind], p.n_fft))
     return TransformSchedule(engine, tuple(fwd), tuple(bwd),
-                             folded_normfact(plan))
+                             folded_normfact(plan), plan.dirs)

@@ -29,7 +29,8 @@ from .bc import (BCType, DataLayout, DirBC, TransformKind, r2r_kind,
                  INVERSE_KIND)
 from . import transforms as tr
 from . import green as gr
-from .engine import as_engine, build_schedule, folded_normfact
+from .engine import (as_engine, build_schedule, folded_normfact, fwd_1d,
+                     bwd_1d)
 
 __all__ = ["Plan1D", "PoissonPlan", "PoissonSolver", "make_plan"]
 
@@ -310,56 +311,13 @@ def build_green(plan: PoissonPlan) -> np.ndarray:
 
 
 # ---------------------------------------------------------------------------
-# forward / backward 1-D ops (jnp, last-axis via moveaxis)
+# forward / backward 1-D ops -- the implementations live in repro.core.engine
+# (``fwd_1d`` / ``bwd_1d``, also the distributed stage API); these aliases
+# keep the historical import surface for standalone callers.
 # ---------------------------------------------------------------------------
 
-def _fwd_1d(x, p: Plan1D, sched=None):
-    # measured (EXPERIMENTS.md section Perf, flups cell): transforming along
-    # the native axis (jnp.fft axis=d) REGRESSES bytes by 11% -- XLA
-    # transposes internally for non-minor FFT axes and loses the fusion of
-    # the explicit moveaxis (a no-op when d is already last). Keep moveaxis.
-    engine = sched.engine if sched is not None else None
-    x = jnp.moveaxis(x, p.dim, -1)
-    if p.flip:
-        x = x[..., ::-1]
-    x = x[..., p.in_start:p.in_start + p.n_in]
-    if p.n_fft > p.n_in:
-        pad = [(0, 0)] * (x.ndim - 1) + [(0, p.n_fft - p.n_in)]
-        x = jnp.pad(x, pad)
-    if p.category in ("sym", "semi"):
-        tables = sched.fwd_tables[p.dim] if sched is not None else None
-        y = tr.r2r_forward(x, p.kind, engine=engine, tables=tables)
-    elif p.dft == "r2c":
-        y = tr._rfft(x, engine)
-    else:
-        y = tr._cfft(x, engine)
-    return jnp.moveaxis(y, -1, p.dim)
-
-
-def _bwd_1d(y, p: Plan1D, sched=None):
-    # NOTE: no normalization multiply here -- every direction's normfact is
-    # folded into the Green's function at plan time (build_green).
-    engine = sched.engine if sched is not None else None
-    y = jnp.moveaxis(y, p.dim, -1)
-    if p.category in ("sym", "semi"):
-        tables = sched.bwd_tables[p.dim] if sched is not None else None
-        x = tr.r2r_backward(y, p.kind, engine=engine, tables=tables)
-    elif p.dft == "r2c":
-        x = tr._irfft(y, p.n_fft, engine)
-    else:
-        x = tr._cfft(y, engine, inverse=True)
-    x = x[..., :p.n_in]
-    # place into the user-sized axis
-    left = p.in_start
-    right = p.n_pts - p.in_start - p.n_in - (1 if p.per_dup else 0)
-    if left or right:
-        pad = [(0, 0)] * (x.ndim - 1) + [(left, right)]
-        x = jnp.pad(x, pad)
-    if p.per_dup:  # node-periodic: duplicate the first point at the end
-        x = jnp.concatenate([x, x[..., :1]], axis=-1)
-    if p.flip:
-        x = x[..., ::-1]
-    return jnp.moveaxis(x, -1, p.dim)
+_fwd_1d = fwd_1d
+_bwd_1d = bwd_1d
 
 
 # ---------------------------------------------------------------------------

@@ -2,8 +2,23 @@
 
 The 2-D process grid (P1, P2) lives on two named mesh axes; every topology
 switch is scoped to exactly ONE axis (the paper's sub-communicators).  The
-per-direction math is ``repro.core.solver``'s, unchanged; only the axis
-shuffles become ``topology_switch`` collectives.
+per-direction math is ``repro.core.engine``'s, unchanged; only the axis
+shuffles become ``CommStrategy`` collectives.
+
+The local solve is a software pipeline of fused transform+switch STAGES:
+each topology switch carries the next direction's 1-D transform as its
+``post`` continuation (``TransformSchedule.fwd_chunk``/``bwd_chunk``), so
+the ``overlap`` strategy can interleave chunk k's transform with chunk k+1's
+collective -- the paper's non-blocking variants, where shuffle compute hides
+wire time.  Monolithic strategies run the same continuation on the whole
+switched block, so all strategies share one code path and are numerically
+identical.
+
+``comm="auto"`` resolves the strategy at plan time with
+``repro.core.comm.autotune_comm`` (the flups switchsort analogue): each
+candidate (strategy, n_chunks) pair is compiled and timed for THIS plan's
+shapes and mesh, and the winner is cached per (shape, bcs, layout, mesh)
+key.
 
 Uneven data counts (the node-centered N+1 problem the paper's Appendix A
 load balancing solves for MPI) are handled on TPU by padding the *inactive*
@@ -16,6 +31,7 @@ CPU-cluster deployment path would use).
 """
 from __future__ import annotations
 
+import time
 from functools import partial
 
 import numpy as np
@@ -25,9 +41,10 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 
 from repro.core.bc import DataLayout
 from repro.core import green as gr
-from repro.core.comm import CommConfig, topology_switch
+from repro.core.comm import (CommConfig, as_comm, autotune_comm,
+                             crop_axis, make_strategy, pad_axis)
 from repro.core.engine import as_engine, build_schedule
-from repro.core.solver import make_plan, build_green, _fwd_1d, _bwd_1d
+from repro.core.solver import make_plan, build_green
 
 __all__ = ["DistributedPoissonSolver"]
 
@@ -36,20 +53,9 @@ def _pad_to(n: int, p: int) -> int:
     return -(-n // p) * p
 
 
-def _pad_dim(x, d, target):
-    if x.shape[d] == target:
-        return x
-    pad = [(0, 0)] * x.ndim
-    pad[d] = (0, target - x.shape[d])
-    return jnp.pad(x, pad)
-
-
-def _crop_dim(x, d, target):
-    if x.shape[d] == target:
-        return x
-    sl = [slice(None)] * x.ndim
-    sl[d] = slice(0, target)
-    return x[tuple(sl)]
+# axis pad/crop shared with the comm chunking layer
+_pad_dim = pad_axis
+_crop_dim = crop_axis
 
 
 class DistributedPoissonSolver:
@@ -59,19 +65,22 @@ class DistributedPoissonSolver:
     ``batch_axis``: optional extra mesh axis (e.g. "pod"): the solver then
     takes a leading batch dimension sharded over that axis (data-parallel
     fields, the multi-pod configuration).
+    ``comm``: a ``CommConfig``, a strategy name, or ``"auto"`` (plan-time
+    autotuned; see module docstring).
     """
 
     def __init__(self, shape, L, bcs, layout=DataLayout.CELL,
                  green_kind=gr.GreenKind.CHAT2, *, mesh, axes=("data", "model"),
-                 comm: CommConfig = CommConfig(), batch_axis=None,
+                 comm=CommConfig(), batch_axis=None,
                  eps_factor: float = 2.0, dtype=jnp.float32,
-                 lazy_green: bool = False, engine="xla"):
+                 lazy_green: bool = False, engine="xla",
+                 autotune_candidates=None, autotune_cache=None,
+                 autotune_batch=None):
         self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor)
         self.engine = as_engine(engine)
         self.schedule = build_schedule(self.plan, self.engine)
         self.mesh = mesh
         self.axes = axes
-        self.comm = comm
         self.batch_axis = batch_axis
         self.dtype = dtype
         e = self.plan.order
@@ -111,9 +120,57 @@ class DistributedPoissonSolver:
             self.in_spec = P(batch_axis, *spec_in)
         else:
             self.in_spec = P(*spec_in)
+        self._green_dev = None
 
-        local = self._local_solve
-        if batch_axis is not None:
+        if isinstance(comm, str) and comm == "auto":
+            self.comm = self._autotune(autotune_candidates, autotune_cache,
+                                       autotune_batch)
+        else:
+            self.comm = as_comm(comm)
+        self._jit = self._build_jit(self.comm, donate=True)
+
+    # -- local (per-shard) pipeline ----------------------------------------
+
+    def _local_solve(self, x, green, *, cfg: CommConfig):
+        sched = self.schedule
+        d0, d1, d2 = self.plan.order
+        a1, a2 = self.axes
+        U, S = self._U, self._S
+        strat = make_strategy(cfg)
+
+        # forward sweep: every switch carries the next direction's transform
+        # as its post continuation (crop the gathered axis, then transform)
+        x = sched.fwd_chunk(x, d0)
+        x = _pad_dim(x, d0, self._PS0)
+        x = strat.stage(
+            x, a1, d0, d1,
+            post=lambda c: sched.fwd_chunk(_crop_dim(c, d1, U[d1]), d1))
+        x = _pad_dim(x, d1, self._PS1)
+        x = strat.stage(
+            x, a2, d1, d2,
+            post=lambda c: sched.fwd_chunk(_crop_dim(c, d2, U[d2]), d2))
+
+        x = sched.green_multiply(x, green)
+
+        x = sched.bwd_chunk(x, d2)
+        x = _pad_dim(x, d2, self._PU2)
+        x = strat.stage(
+            x, a2, d2, d1,
+            post=lambda c: sched.bwd_chunk(_crop_dim(c, d1, S[d1]), d1))
+        x = _pad_dim(x, d1, self._PU1)
+        x = strat.stage(
+            x, a1, d1, d0,
+            post=lambda c: sched.bwd_chunk(_crop_dim(c, d0, S[d0]), d0))
+        if jnp.iscomplexobj(x):
+            x = x.real
+        return x.astype(self.dtype)
+
+    # -- jit assembly --------------------------------------------------------
+
+    def _build_jit(self, cfg: CommConfig, donate: bool):
+        """shard_map + jit of the local pipeline under one comm config."""
+        local = partial(self._local_solve, cfg=cfg)
+        if self.batch_axis is not None:
             local = jax.vmap(local, in_axes=(0, None))
         shard_map = getattr(jax, "shard_map", None)
         if shard_map is None:  # jax < 0.6: experimental namespace
@@ -125,47 +182,61 @@ class DistributedPoissonSolver:
             if "check_rep" in inspect.signature(shard_map).parameters:
                 smap_kw["check_rep"] = False
         fn = shard_map(
-            local, mesh=mesh,
+            local, mesh=self.mesh,
             in_specs=(self.in_spec, self.g_spec),
             out_specs=self.in_spec, **smap_kw)
-        self._jit = jax.jit(fn, donate_argnums=(0,))
-        self._green_dev = None
+        return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
-    # -- local (per-shard) pipeline ----------------------------------------
+    # -- plan-time comm autotuner (flups switchsort analogue) ----------------
 
-    def _local_solve(self, x, green):
-        plan = self.plan
-        sched = self.schedule
-        d0, d1, d2 = plan.order
-        dirs = plan.dirs
-        a1, a2 = self.axes
-        cfg = self.comm
-        U, S = self._U, self._S
+    def autotune_key(self):
+        """Canonical, repr-stable identity of (shape, bcs, layout, mesh)."""
+        dirs = self.plan.dirs
+        return (
+            tuple(p.n for p in dirs),
+            tuple((p.bc.left.name, p.bc.right.name) for p in dirs),
+            dirs[0].layout.name,
+            tuple((a, int(self.mesh.shape[a])) for a in self.mesh.axis_names),
+            tuple(self.axes), self.batch_axis,
+            jnp.dtype(self.dtype).name, self.engine.name,
+        )
 
-        x = _fwd_1d(x, dirs[d0], sched)
-        x = _pad_dim(x, d0, self._PS0)
-        x = topology_switch(x, a1, d0, d1, cfg)
-        x = _crop_dim(x, d1, U[d1])
-        x = _fwd_1d(x, dirs[d1], sched)
-        x = _pad_dim(x, d1, self._PS1)
-        x = topology_switch(x, a2, d1, d2, cfg)
-        x = _crop_dim(x, d2, U[d2])
-        x = _fwd_1d(x, dirs[d2], sched)
+    def _autotune(self, candidates, cache_path, batch=None,
+                  reps: int = 3) -> CommConfig:
+        # timed workload: per-shard batch 1 unless the caller states the
+        # production batch (``autotune_batch``); the timed extent is part
+        # of the cache key, so differently-sized tunings never collide
+        if self.batch_axis is None:
+            batch = None
+        elif batch is None:
+            batch = self.mesh.shape[self.batch_axis]
+        fshape = self.padded_input_shape(batch)
+        gsd = self._green_np
 
-        x = sched.green_multiply(x, green)
+        def time_cfg(cfg):
+            fn = self._build_jit(cfg, donate=False)
+            f = jax.device_put(jnp.ones(fshape, self.dtype),
+                               NamedSharding(self.mesh, self.in_spec))
+            # lazy_green dry-runs autotune against a zero kernel: comm cost
+            # does not depend on the Green's values, only its layout
+            if isinstance(gsd, jax.ShapeDtypeStruct):
+                g = jax.device_put(jnp.zeros(gsd.shape, gsd.dtype),
+                                   NamedSharding(self.mesh, self.g_spec))
+            else:
+                g = self.green_device()
+            fn(f, g).block_until_ready()          # compile + warm
+            best = float("inf")
+            for _ in range(reps):
+                t0 = time.perf_counter()
+                fn(f, g).block_until_ready()
+                best = min(best, time.perf_counter() - t0)
+            return best
 
-        x = _bwd_1d(x, dirs[d2], sched)
-        x = _pad_dim(x, d2, self._PU2)
-        x = topology_switch(x, a2, d2, d1, cfg)
-        x = _crop_dim(x, d1, S[d1])
-        x = _bwd_1d(x, dirs[d1], sched)
-        x = _pad_dim(x, d1, self._PU1)
-        x = topology_switch(x, a1, d1, d0, cfg)
-        x = _crop_dim(x, d0, S[d0])
-        x = _bwd_1d(x, dirs[d0], sched)
-        if jnp.iscomplexobj(x):
-            x = x.real
-        return x.astype(self.dtype)
+        self.autotune_results = {}
+        key = self.autotune_key() + (("tuned_batch", batch),)
+        return autotune_comm(key, time_cfg,
+                             candidates=candidates, cache_path=cache_path,
+                             results=self.autotune_results)
 
     # -- public API ----------------------------------------------------------
 

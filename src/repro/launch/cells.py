@@ -170,15 +170,25 @@ def build_cell(arch: str, shape_name: str, mesh,
 
 
 def _build_poisson_cell(shape_name, mesh, comm):
+    from repro.core.comm import autotune_candidates
     from repro.configs.flups_poisson import CONFIG
     from repro.distributed.pencil import DistributedPoissonSolver
     multi = "pod" in mesh.shape
+    # precedence: a launcher comm that differs from the stock default wins;
+    # otherwise the arch config's knobs apply (comm="auto" = plan-time
+    # tuner, a capability the dryrun CLI cannot express)
+    if comm == CommConfig():
+        comm = ("auto" if CONFIG.comm == "auto"
+                else CommConfig(CONFIG.comm, CONFIG.comm_chunks))
     solver = DistributedPoissonSolver(
         (CONFIG.n,) * 3, 1.0, CONFIG.bcs, layout=CONFIG.layout,
         green_kind=CONFIG.green, mesh=mesh,
         axes=("data", "model"), comm=comm,
         batch_axis="pod" if multi else None, lazy_green=True,
-        engine=CONFIG.engine)
+        engine=CONFIG.engine,
+        autotune_candidates=autotune_candidates(
+            CONFIG.comm_autotune_max_chunks),
+        autotune_cache=CONFIG.comm_autotune_cache or None)
     batch = CONFIG.batch if multi else None
     f_sds = jax.ShapeDtypeStruct(
         solver.padded_input_shape(batch), jnp.float32,

@@ -123,9 +123,9 @@ def main():
     ap.add_argument("--mesh", default="both", choices=["single", "multi",
                                                        "both"])
     ap.add_argument("--comm", default="a2a",
-                    choices=["a2a", "pipelined", "fused"])
+                    choices=["a2a", "pipelined", "fused", "overlap"])
     ap.add_argument("--chunks", type=int, default=2,
-                    help="pipelined strategy granularity (paper's n_batch)")
+                    help="pipelined/overlap granularity (paper's n_batch)")
     ap.add_argument("--out", default="results/dryrun")
     ap.add_argument("--tag", default=None)
     ap.add_argument("--remat", default=None)

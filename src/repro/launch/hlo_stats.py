@@ -92,6 +92,58 @@ def fft_flops(hlo_text: str) -> float:
     return total
 
 
+_A2A_RE = re.compile(r"all[-_]to[-_]all")
+_FFT_RE = re.compile(r"stablehlo\.fft|call @fft|\bfft\(")
+
+
+def comm_interleave_stats(text: str) -> dict:
+    """Program-order census of topology-switch collectives vs transform
+    compute, from lowered StableHLO or HLO text (pre-scheduling, so line
+    order == trace order).
+
+    Returns ``all_to_all`` (collective count), ``fft`` (transform ops seen
+    before the last collective), ``gaps_with_compute`` (consecutive-
+    collective pairs with >= 1 fft between them -- the ``overlap``
+    strategy's signature: chunk k's transform issued between chunk k and
+    k+1's collectives) and ``adjacent_pairs`` (pairs with none).
+    """
+    # census per function, then keep the one holding the collectives (the
+    # entry computation; fft helper funcs may precede @main in the module)
+    per_func = [[]]
+    for line in text.splitlines():
+        s = line.strip()
+        if "func.func" in s or s.startswith("ENTRY "):
+            per_func.append([])
+            continue
+        if _A2A_RE.search(s):
+            if "-done" in s:    # async pair: count the start only
+                continue
+            per_func[-1].append("a2a")
+        elif _FFT_RE.search(s):
+            per_func[-1].append("fft")
+    seq = max(per_func, key=lambda f: f.count("a2a"))
+    n_a2a = seq.count("a2a")
+    gaps = adjacent = 0
+    fft_before_last = 0
+    pending_fft = 0
+    seen_first = False
+    for tok in seq:
+        if tok == "fft":
+            if seen_first:
+                pending_fft += 1
+            continue
+        if seen_first:
+            if pending_fft:
+                gaps += 1
+                fft_before_last += pending_fft
+            else:
+                adjacent += 1
+        seen_first = True
+        pending_fft = 0
+    return {"all_to_all": n_a2a, "fft": fft_before_last,
+            "gaps_with_compute": gaps, "adjacent_pairs": adjacent}
+
+
 def op_census(hlo_text: str, ops=("fusion", "custom-call", "dot",
                                   "convolution", "scatter", "transpose",
                                   "copy")) -> dict:

@@ -24,7 +24,9 @@ def main(argv=None):
     ap.add_argument("--bcs", default="unb", choices=["unb", "per", "mix"])
     ap.add_argument("--layout", default="node", choices=["node", "cell"])
     ap.add_argument("--comm", default="a2a",
-                    choices=["a2a", "pipelined", "fused"])
+                    choices=["a2a", "pipelined", "fused", "overlap", "auto"])
+    ap.add_argument("--chunks", type=int, default=2,
+                    help="pipelined/overlap granularity (paper's n_batch)")
     ap.add_argument("--green", default="chat2")
     ap.add_argument("--engine", default="xla", choices=["xla", "pallas"],
                     help="transform engine: pure XLA or the Pallas kernels")
@@ -55,10 +57,23 @@ def main(argv=None):
         f"need {n_dev} devices; run with "
         f"XLA_FLAGS=--xla_force_host_platform_device_count={n_dev}")
     mesh = jax.make_mesh((args.p1, args.p2), ("data", "model"))
+    comm = ("auto" if args.comm == "auto"
+            else CommConfig(strategy=args.comm, n_chunks=args.chunks))
     solver = DistributedPoissonSolver(
         (args.n,) * 3, 1.0, bcs, layout=layout, green_kind=args.green,
-        mesh=mesh, comm=CommConfig(strategy=args.comm), dtype=jnp.float64,
+        mesh=mesh, comm=comm, dtype=jnp.float64,
         engine=args.engine)
+    if args.comm == "auto":
+        picked = (f"{solver.comm.strategy}"
+                  f"(n_chunks={solver.comm.n_chunks})")
+        if solver.autotune_results:
+            print(f"[solve] comm=auto -> {picked}, candidates: " +
+                  ", ".join(f"{k}={v*1e3:.1f}ms"
+                            for k, v in sorted(
+                                solver.autotune_results.items())))
+        else:
+            print(f"[solve] comm=auto -> {picked} (cached winner, "
+                  "sweep skipped)")
 
     # rhs: the paper's validation field for the chosen BCs
     import sys

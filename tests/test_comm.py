@@ -1,0 +1,164 @@
+"""Unit tests for the CommStrategy classes and the plan-time autotuner
+(single process; the multi-device equivalence runs live in
+tests/test_distributed.py)."""
+import numpy as np
+import pytest
+
+from repro.core import comm as cm
+from repro.core.comm import (CommConfig, as_comm, autotune_candidates,
+                             autotune_comm, clear_autotune_cache,
+                             make_strategy)
+from repro.launch.hlo_stats import comm_interleave_stats
+
+
+# -- config parsing ---------------------------------------------------------
+
+def test_strategies_registry_complete():
+    assert set(cm.STRATEGIES) == {"a2a", "pipelined", "fused", "overlap"}
+    for name in cm.STRATEGIES:
+        strat = make_strategy(CommConfig(name, 3))
+        assert strat.name == name
+        assert strat.n_chunks == 3
+
+
+def test_comm_config_rejects_unknown_strategy():
+    with pytest.raises(AssertionError):
+        CommConfig("allgather")
+    with pytest.raises(AssertionError):
+        CommConfig("a2a", 0)
+
+
+def test_as_comm_accepts_name_config_and_none():
+    assert as_comm(None) == CommConfig()
+    assert as_comm("overlap") == CommConfig("overlap")
+    cfg = CommConfig("pipelined", 8)
+    assert as_comm(cfg) is cfg
+
+
+# -- chunk padding (the silent-fallback fix) --------------------------------
+
+def test_split_chunks_pads_non_dividing_axis_and_warns_once():
+    import jax.numpy as jnp
+    x = jnp.arange(2 * 7 * 3, dtype=jnp.float32).reshape(2, 7, 3)
+    cm._WARNED.clear()
+    with pytest.warns(RuntimeWarning, match="zero-padding"):
+        chunks, ln = cm._split_chunks(x, 1, 2)
+    assert ln == 7
+    assert [c.shape for c in chunks] == [(2, 4, 3), (2, 4, 3)]
+    merged = jnp.concatenate(chunks, axis=1)
+    np.testing.assert_array_equal(np.asarray(merged[:, :7]), np.asarray(x))
+    np.testing.assert_array_equal(np.asarray(merged[:, 7:]), 0.0)
+    # second occurrence of the same shape is silent (warn once)
+    import warnings
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        cm._split_chunks(x, 1, 2)
+
+
+def test_split_chunks_exact_division_no_pad():
+    import jax.numpy as jnp
+    x = jnp.ones((2, 8, 3))
+    chunks, ln = cm._split_chunks(x, 1, 4)
+    assert ln == 8 and len(chunks) == 4
+    assert all(c.shape == (2, 2, 3) for c in chunks)
+
+
+# -- autotuner --------------------------------------------------------------
+
+def test_autotune_candidates_sweep():
+    cands = autotune_candidates(max_chunks=4)
+    labels = {(c.strategy, c.n_chunks) for c in cands}
+    assert ("a2a", 1) in labels and ("fused", 1) in labels
+    assert ("pipelined", 2) in labels and ("overlap", 4) in labels
+    assert all(isinstance(c, CommConfig) for c in cands)
+
+
+def test_autotune_picks_fastest_and_caches_in_memory():
+    clear_autotune_cache()
+    calls = []
+
+    def fake_time(cfg):
+        calls.append(cfg)
+        return 0.001 if cfg == CommConfig("overlap", 4) else 0.01
+
+    res = {}
+    best = autotune_comm(("k1",), fake_time, cache_path="", results=res)
+    assert best == CommConfig("overlap", 4)
+    assert len(calls) == len(autotune_candidates())
+    assert res and min(res.values()) == 0.001
+
+    # same key: cache hit, the timer must not run again
+    res2 = {}
+    best2 = autotune_comm(("k1",), fake_time, cache_path="", results=res2)
+    assert best2 == best
+    assert len(calls) == len(autotune_candidates())
+    assert res2 == {}
+
+
+def test_autotune_persists_to_json_cache(tmp_path):
+    clear_autotune_cache()
+    path = str(tmp_path / "comm_cache.json")
+
+    def timer(cfg):
+        return 0.002 if cfg.strategy == "fused" else 0.02
+
+    best = autotune_comm(("k2",), timer, cache_path=path)
+    assert best == CommConfig("fused", 1)
+
+    # a fresh process (simulated by clearing the in-memory cache) reads the
+    # persisted winner without re-timing
+    clear_autotune_cache()
+    best2 = autotune_comm(
+        ("k2",), lambda cfg: pytest.fail("must hit the disk cache"),
+        cache_path=path)
+    assert best2 == best
+
+
+@pytest.mark.filterwarnings("ignore::RuntimeWarning")
+def test_autotune_skips_failing_candidates():
+    clear_autotune_cache()
+
+    def flaky(cfg):
+        if cfg.strategy != "pipelined":
+            raise RuntimeError("no lowering")
+        return 0.5 / cfg.n_chunks
+
+    best = autotune_comm(("k3",), flaky, cache_path="")
+    assert best.strategy == "pipelined"
+    assert best.n_chunks == max(
+        c.n_chunks for c in autotune_candidates() if c.strategy == "pipelined")
+
+    def always_fails(cfg):
+        raise RuntimeError("nope")
+
+    assert autotune_comm(("k4",), always_fails, cache_path="") == CommConfig()
+
+
+# -- HLO interleave census --------------------------------------------------
+
+_FAKE_MLIR = """
+module @jit_solve {
+  func.func private @fft(%a: tensor<4xf32>) {
+    %f = "stablehlo.fft"(%a)
+  }
+  func.func public @main(%x: tensor<8xf32>) {
+    %0 = call @fft(%x)
+    %1 = "stablehlo.all_to_all"(%0)
+    %2 = "stablehlo.all_to_all"(%1)
+    %3 = call @fft(%2)
+    %4 = "stablehlo.all_to_all"(%3)
+    %5 = call @fft(%4)
+    %6 = call @fft(%5)
+  }
+}
+"""
+
+
+def test_comm_interleave_stats_census():
+    stats = comm_interleave_stats(_FAKE_MLIR)
+    assert stats["all_to_all"] == 3
+    # one adjacent collective pair (1->2), one gap holding a transform (2->4)
+    assert stats["adjacent_pairs"] == 1
+    assert stats["gaps_with_compute"] == 1
+    # only transforms between collectives count, not the pre/post ones
+    assert stats["fft"] == 1

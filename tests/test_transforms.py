@@ -1,4 +1,15 @@
-"""DCT/DST I-IV vs scipy.fft oracle + inverse roundtrip properties."""
+"""Property-based DCT/DST I-IV coverage (scipy.fft oracle + algebraic laws).
+
+Random lengths 3..129 (odd and even), all 8 r2r kinds, both engines, via
+``hypothesis`` when installed or the deterministic ``_hypothesis_shim``:
+
+* scipy oracle        T(x) == scipy.fft.{dct,dst}(x, type, norm=None)
+* round trip          bwd(fwd(x)) == x / normfact  (fwd o bwd = n * id)
+* linearity           T(a x + b y) == a T(x) + b T(y)
+* Parseval energy     sum w_out y^2 == scale * sum w_in x^2, with the
+                      endpoint weights of each kind's (non-orthonormal)
+                      scipy convention and scale = 1 / normfact
+"""
 import numpy as np
 import pytest
 import scipy.fft as sfft
@@ -11,6 +22,7 @@ except ImportError:  # CI images without hypothesis: deterministic local shim
 
 from repro.core.bc import TransformKind
 from repro.core import transforms as tr
+from repro.core.engine import TransformEngine
 
 KINDS = {
     TransformKind.DCT1: ("dct", 1), TransformKind.DCT2: ("dct", 2),
@@ -19,6 +31,8 @@ KINDS = {
     TransformKind.DST3: ("dst", 3), TransformKind.DST4: ("dst", 4),
 }
 
+ENGINES = {"xla": None, "pallas": TransformEngine("pallas")}
+
 
 def _scipy(kind, x):
     name, t = KINDS[kind]
@@ -26,68 +40,60 @@ def _scipy(kind, x):
     return fn(x, type=t, axis=-1, norm=None)
 
 
-@pytest.mark.parametrize("kind", list(KINDS))
-@pytest.mark.parametrize("m", [3, 4, 5, 8, 16, 17, 33])
-def test_r2r_matches_scipy(kind, m):
-    if kind == TransformKind.DCT1 and m < 2:
-        pytest.skip("DCT-I needs m >= 2")
-    rng = np.random.default_rng(42 + m)
-    x = rng.standard_normal((2, m)).astype(np.float64)
-    got = np.asarray(tr.r2r_forward(jnp.asarray(x), kind))
-    want = _scipy(kind, x)
-    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-8)
+def _energy_weights(kind, m):
+    """Input/output endpoint weights + scale of each kind's Parseval-style
+    identity  sum w_out y^2 = scale * sum w_in x^2  under the unnormalized
+    scipy convention (scale == 1 / r2r_normfact)."""
+    name, t = KINDS[kind]
+    win = np.ones(m)
+    wout = np.ones(m)
+    if t == 1 and name == "dct":
+        win[0] = win[-1] = 0.5
+        wout = win.copy()
+    elif t == 2:
+        if name == "dct":
+            wout[0] = 0.5
+        else:
+            wout[-1] = 0.5
+    elif t == 3:
+        if name == "dct":
+            win[0] = 0.5
+        else:
+            win[-1] = 0.5
+    return win, wout, 1.0 / tr.r2r_normfact(kind, m)
 
 
-@pytest.mark.parametrize("kind", list(KINDS))
-@pytest.mark.parametrize("m", [4, 9, 16])
-def test_r2r_roundtrip(kind, m):
-    rng = np.random.default_rng(m)
+SIZES = st.integers(min_value=3, max_value=129)
+ALL_KINDS = st.sampled_from(list(KINDS))
+ENGINE_NAMES = st.sampled_from(list(ENGINES))
+SEEDS = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=SIZES, kind=ALL_KINDS, engine=ENGINE_NAMES, seed=SEEDS)
+def test_r2r_matches_scipy_property(m, kind, engine, seed):
+    """Oracle property: any length, any kind, either engine == scipy."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((2, m))
+    got = np.asarray(tr.r2r_forward(jnp.asarray(x), kind,
+                                    engine=ENGINES[engine]))
+    np.testing.assert_allclose(got, _scipy(kind, x), rtol=1e-7, atol=1e-7)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=SIZES, kind=ALL_KINDS, engine=ENGINE_NAMES, seed=SEEDS)
+def test_r2r_roundtrip_property(m, kind, engine, seed):
+    """fwd o bwd = n * id: the inverse recovers x up to the normfact."""
+    rng = np.random.default_rng(seed)
     x = rng.standard_normal((3, m))
-    y = tr.r2r_forward(jnp.asarray(x), kind)
-    back = tr.r2r_backward(y, kind) * tr.r2r_normfact(kind, m)
-    np.testing.assert_allclose(np.asarray(back), x, rtol=1e-7, atol=1e-9)
-
-
-@pytest.mark.parametrize("kind", list(KINDS))
-@pytest.mark.parametrize("m", [15, 16])  # odd and even sizes
-@pytest.mark.parametrize("dtype", [np.float32, np.float64])
-def test_r2r_half_spectrum_all_kinds_dtypes(kind, m, dtype):
-    """Half-spectrum path: all 8 kinds x odd/even sizes x f32/f64 vs scipy."""
-    rng = np.random.default_rng(7 * m + sum(kind.value.encode()))
-    x = rng.standard_normal((4, m)).astype(dtype)
-    got = np.asarray(tr.r2r_forward(jnp.asarray(x), kind))
-    assert got.dtype == dtype
-    tol = 1e-4 if dtype == np.float32 else 1e-9
-    np.testing.assert_allclose(got, _scipy(kind, x), rtol=tol, atol=tol)
-
-
-@pytest.mark.parametrize("kind", list(KINDS))
-@pytest.mark.parametrize("m", [5, 12])
-def test_r2r_matches_legacy_full_complex(kind, m):
-    """New half-spectrum path == the seed full-complex path (transforms_ref)."""
-    from repro.core import transforms_ref as trf
-    rng = np.random.default_rng(m)
-    x = jnp.asarray(rng.standard_normal((3, m)))
-    got = np.asarray(tr.r2r_forward(x, kind))
-    want = np.asarray(trf.r2r_forward(x, kind))
-    np.testing.assert_allclose(got, want, rtol=1e-9, atol=1e-9)
-
-
-@pytest.mark.parametrize("kind", [TransformKind.DCT2, TransformKind.DST2])
-def test_r2r_float32(kind):
-    rng = np.random.default_rng(0)
-    x = rng.standard_normal((4, 32)).astype(np.float32)
-    got = np.asarray(tr.r2r_forward(jnp.asarray(x), kind))
-    assert got.dtype == np.float32
-    np.testing.assert_allclose(got, _scipy(kind, x), rtol=1e-4, atol=1e-4)
+    eng = ENGINES[engine]
+    y = tr.r2r_forward(jnp.asarray(x), kind, engine=eng)
+    back = tr.r2r_backward(y, kind, engine=eng) * tr.r2r_normfact(kind, m)
+    np.testing.assert_allclose(np.asarray(back), x, rtol=1e-6, atol=1e-8)
 
 
 @settings(max_examples=25, deadline=None)
-@given(
-    m=st.integers(min_value=3, max_value=40),
-    kind=st.sampled_from(list(KINDS)),
-    seed=st.integers(min_value=0, max_value=2**31 - 1),
-)
+@given(m=SIZES, kind=ALL_KINDS, seed=SEEDS)
 def test_r2r_linearity_property(m, kind, seed):
     """Property: T(a x + b y) == a T(x) + b T(y) and scipy agreement."""
     rng = np.random.default_rng(seed)
@@ -101,3 +107,43 @@ def test_r2r_linearity_property(m, kind, seed):
     np.testing.assert_allclose(lhs, rhs, rtol=1e-7, atol=1e-7)
     np.testing.assert_allclose(lhs, _scipy(kind, a * x + b * y),
                                rtol=1e-7, atol=1e-7)
+
+
+@settings(max_examples=40, deadline=None)
+@given(m=SIZES, kind=ALL_KINDS, engine=ENGINE_NAMES, seed=SEEDS)
+def test_r2r_parseval_property(m, kind, engine, seed):
+    """Energy is preserved up to the convention's endpoint weights."""
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal(m)
+    y = np.asarray(tr.r2r_forward(jnp.asarray(x), kind,
+                                  engine=ENGINES[engine]))
+    win, wout, scale = _energy_weights(kind, m)
+    lhs = float(np.sum(wout * y * y))
+    rhs = scale * float(np.sum(win * x * x))
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-6)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=SIZES, kind=ALL_KINDS, seed=SEEDS)
+def test_r2r_matches_legacy_full_complex(m, kind, seed):
+    """Half-spectrum path == the seed full-complex path (transforms_ref)."""
+    from repro.core import transforms_ref as trf
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((3, m)))
+    got = np.asarray(tr.r2r_forward(x, kind))
+    want = np.asarray(trf.r2r_forward(x, kind))
+    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-8)
+
+
+@pytest.mark.parametrize("kind", list(KINDS))
+@pytest.mark.parametrize("m", [15, 16])  # odd and even sizes
+@pytest.mark.parametrize("dtype", [np.float32, np.float64])
+def test_r2r_half_spectrum_all_kinds_dtypes(kind, m, dtype):
+    """f32/f64 dtype preservation vs scipy (fixed shapes: dtype is the
+    subject here, the size sweep lives in the properties above)."""
+    rng = np.random.default_rng(7 * m + sum(kind.value.encode()))
+    x = rng.standard_normal((4, m)).astype(dtype)
+    got = np.asarray(tr.r2r_forward(jnp.asarray(x), kind))
+    assert got.dtype == dtype
+    tol = 1e-4 if dtype == np.float32 else 1e-9
+    np.testing.assert_allclose(got, _scipy(kind, x), rtol=tol, atol=tol)
