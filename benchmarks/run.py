@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: convergence,comm,scaling,biot,"
-                         "kernels,roofline,train")
+                         "kernels,roofline,train,batch")
     args = ap.parse_args()
     quick = not args.full
 
@@ -35,6 +35,7 @@ def main() -> None:
         "kernels": "bench_kernels",
         "train": "bench_train",
         "roofline": "bench_roofline",
+        "batch": "bench_batch",
     }
     only = args.only.split(",") if args.only else list(jobs)
     print("name,us_per_call,derived")

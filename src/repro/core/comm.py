@@ -148,6 +148,13 @@ class CommStrategy:
     run ``post`` on the whole switched block; ``overlap`` interleaves it
     chunk-wise with the collectives.  ``switch`` is the plain transpose
     (``post=None``), the API the MoE/attention layers use.
+
+    ``chunk_axis`` (stage/switch keyword) is a PREFERRED chunk axis for the
+    chunked strategies -- the batched multi-RHS solve passes its leading
+    batch axis here, a free chunk dimension that is never split or gathered
+    by any topology switch.  The preference is honored when ``n_chunks``
+    divides the axis length exactly (such an axis never needs
+    zero-padding); otherwise the usual uninvolved grid axis is used.
     """
 
     name: str = "?"
@@ -155,23 +162,37 @@ class CommStrategy:
     def __init__(self, n_chunks: int = 1):
         self.n_chunks = max(int(n_chunks), 1)
 
+    def _chunk_axis(self, x, split_axis: int, concat_axis: int,
+                    chunk_axis) -> int:
+        if (chunk_axis is not None
+                and chunk_axis not in (split_axis, concat_axis)
+                and x.shape[chunk_axis] % self.n_chunks == 0):
+            return chunk_axis
+        return _uninvolved_axis(x.ndim, split_axis, concat_axis)
+
     # -- to be overridden -------------------------------------------------
-    def _switch(self, x, axis_name, split_axis, concat_axis):
+    def _switch(self, x, axis_name, split_axis, concat_axis,
+                chunk_axis=None):
         raise NotImplementedError
 
     # -- shared surface ----------------------------------------------------
-    def switch(self, x, axis_name, split_axis, concat_axis):
-        return self.stage(x, axis_name, split_axis, concat_axis, post=None)
+    def switch(self, x, axis_name, split_axis, concat_axis,
+               chunk_axis=None):
+        return self.stage(x, axis_name, split_axis, concat_axis, post=None,
+                          chunk_axis=chunk_axis)
 
-    def stage(self, x, axis_name, split_axis, concat_axis, post=None):
-        y = self._switch(x, axis_name, split_axis, concat_axis)
+    def stage(self, x, axis_name, split_axis, concat_axis, post=None,
+              chunk_axis=None):
+        y = self._switch(x, axis_name, split_axis, concat_axis,
+                         chunk_axis=chunk_axis)
         return post(y) if post is not None else y
 
 
 class A2AStrategy(CommStrategy):
     name = "a2a"
 
-    def _switch(self, x, axis_name, split_axis, concat_axis):
+    def _switch(self, x, axis_name, split_axis, concat_axis,
+                chunk_axis=None):
         y = _a2a(x, axis_name, split_axis, concat_axis)
         # explicit pack/unpack materialization: force a contiguous copy so
         # the collective is surrounded by dedicated buffer ops (flups a2a)
@@ -188,7 +209,8 @@ class A2AStrategy(CommStrategy):
 class FusedStrategy(CommStrategy):
     name = "fused"
 
-    def _switch(self, x, axis_name, split_axis, concat_axis):
+    def _switch(self, x, axis_name, split_axis, concat_axis,
+                chunk_axis=None):
         return _a2a(x, axis_name, split_axis, concat_axis)
 
 
@@ -197,10 +219,11 @@ class PipelinedStrategy(CommStrategy):
 
     name = "pipelined"
 
-    def _switch(self, x, axis_name, split_axis, concat_axis):
+    def _switch(self, x, axis_name, split_axis, concat_axis,
+                chunk_axis=None):
         if self.n_chunks <= 1:
             return _a2a(x, axis_name, split_axis, concat_axis)
-        ax = _uninvolved_axis(x.ndim, split_axis, concat_axis)
+        ax = self._chunk_axis(x, split_axis, concat_axis, chunk_axis)
         chunks, ln = _split_chunks(x, ax, self.n_chunks)
         outs = [_a2a(c, axis_name, split_axis, concat_axis) for c in chunks]
         return crop_axis(jnp.concatenate(outs, axis=ax), ax, ln)
@@ -213,16 +236,19 @@ class OverlapStrategy(CommStrategy):
 
     name = "overlap"
 
-    def _switch(self, x, axis_name, split_axis, concat_axis):
+    def _switch(self, x, axis_name, split_axis, concat_axis,
+                chunk_axis=None):
         # plain transpose (no continuation): same wire pattern as pipelined
         return PipelinedStrategy(self.n_chunks)._switch(
-            x, axis_name, split_axis, concat_axis)
+            x, axis_name, split_axis, concat_axis, chunk_axis=chunk_axis)
 
-    def stage(self, x, axis_name, split_axis, concat_axis, post=None):
+    def stage(self, x, axis_name, split_axis, concat_axis, post=None,
+              chunk_axis=None):
         if post is None or self.n_chunks <= 1:
-            y = self._switch(x, axis_name, split_axis, concat_axis)
+            y = self._switch(x, axis_name, split_axis, concat_axis,
+                             chunk_axis=chunk_axis)
             return post(y) if post is not None else y
-        ax = _uninvolved_axis(x.ndim, split_axis, concat_axis)
+        ax = self._chunk_axis(x, split_axis, concat_axis, chunk_axis)
         chunks, ln = _split_chunks(x, ax, self.n_chunks)
         outs = []
         inflight = _a2a(chunks[0], axis_name, split_axis, concat_axis)
@@ -246,10 +272,11 @@ def make_strategy(cfg: CommConfig) -> CommStrategy:
 
 
 def topology_switch(x, axis_name, split_axis: int, concat_axis: int,
-                    cfg: CommConfig):
+                    cfg: CommConfig, chunk_axis=None):
     """Distributed transpose: split ``split_axis`` over ``axis_name`` ranks,
     gather ``concat_axis``.  Must run inside shard_map."""
-    return make_strategy(cfg).switch(x, axis_name, split_axis, concat_axis)
+    return make_strategy(cfg).switch(x, axis_name, split_axis, concat_axis,
+                                     chunk_axis=chunk_axis)
 
 
 # ---------------------------------------------------------------------------

@@ -24,6 +24,14 @@ The schedule is also the distributed solver's STAGE API: ``fwd_chunk`` /
 to any chunk of it cut along an uninvolved axis -- the unit the ``overlap``
 comm strategy interleaves with the per-chunk collectives of a topology
 switch (see ``repro.core.comm``).
+
+Batched multi-RHS execution: every op here is rank-polymorphic.  A plan
+describes ``len(plan.dirs)`` grid dimensions; any leading axes of the array
+are batch axes (``B`` independent right-hand sides sharing one plan), and a
+direction's array axis is ``batch_ndim + p.dim``.  The 1-D transforms are
+last-axis ops over flattened rows, so a batched solve runs the SAME number
+of (bigger) FFT calls as a single solve -- the multi-RHS amortization of
+the original FLUPS / P3DFFT batched transform APIs.
 """
 from __future__ import annotations
 
@@ -72,9 +80,21 @@ def as_engine(engine) -> TransformEngine:
 # per-direction 1-D ops (jnp, last-axis via moveaxis)
 # ---------------------------------------------------------------------------
 
+def _batch_ndim(x, sched) -> int:
+    """Leading batch axes of ``x`` relative to the schedule's grid rank."""
+    if sched is None or not sched.dirs:
+        return 0
+    bnd = x.ndim - len(sched.dirs)
+    assert 0 <= bnd, (x.shape, len(sched.dirs))
+    return bnd
+
+
 def fwd_1d(x, p, sched=None):
     """Forward 1-D transform of direction ``p`` (a ``Plan1D``), applied to
     the whole block or to any chunk cut along an axis other than ``p.dim``.
+    Leading batch axes (multi-RHS) pass through untouched -- the schedule
+    is what knows the grid rank, so batched arrays REQUIRE ``sched``;
+    with ``sched=None`` the array rank must equal the plan's.
     """
     # measured (EXPERIMENTS.md section Perf, flups cell): transforming along
     # the native axis (jnp.fft axis=d) REGRESSES bytes by 11% -- XLA
@@ -82,7 +102,7 @@ def fwd_1d(x, p, sched=None):
     # the explicit moveaxis (a no-op when d is already last). Keep moveaxis.
     from . import transforms as tr
     engine = sched.engine if sched is not None else None
-    x = jnp.moveaxis(x, p.dim, -1)
+    x = jnp.moveaxis(x, _batch_ndim(x, sched) + p.dim, -1)
     if p.flip:
         x = x[..., ::-1]
     x = x[..., p.in_start:p.in_start + p.n_in]
@@ -96,17 +116,18 @@ def fwd_1d(x, p, sched=None):
         y = tr._rfft(x, engine)
     else:
         y = tr._cfft(x, engine)
-    return jnp.moveaxis(y, -1, p.dim)
+    return jnp.moveaxis(y, -1, _batch_ndim(y, sched) + p.dim)
 
 
 def bwd_1d(y, p, sched=None):
-    """Inverse 1-D transform of direction ``p``; chunk-safe like ``fwd_1d``.
+    """Inverse 1-D transform of direction ``p``; chunk-safe like ``fwd_1d``
+    (and like it, batched arrays require ``sched``).
     """
     # NOTE: no normalization multiply here -- every direction's normfact is
     # folded into the Green's function at plan time (build_green).
     from . import transforms as tr
     engine = sched.engine if sched is not None else None
-    y = jnp.moveaxis(y, p.dim, -1)
+    y = jnp.moveaxis(y, _batch_ndim(y, sched) + p.dim, -1)
     if p.category in ("sym", "semi"):
         tables = sched.bwd_tables[p.dim] if sched is not None else None
         x = tr.r2r_backward(y, p.kind, engine=engine, tables=tables)
@@ -125,7 +146,7 @@ def bwd_1d(y, p, sched=None):
         x = jnp.concatenate([x, x[..., :1]], axis=-1)
     if p.flip:
         x = x[..., ::-1]
-    return jnp.moveaxis(x, -1, p.dim)
+    return jnp.moveaxis(x, -1, _batch_ndim(x, sched) + p.dim)
 
 
 @dataclass(frozen=True)

@@ -17,6 +17,8 @@ is reused unchanged.
 """
 from __future__ import annotations
 
+import threading
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from functools import partial
 
@@ -32,7 +34,9 @@ from . import green as gr
 from .engine import (as_engine, build_schedule, folded_normfact, fwd_1d,
                      bwd_1d)
 
-__all__ = ["Plan1D", "PoissonPlan", "PoissonSolver", "make_plan"]
+__all__ = ["Plan1D", "PoissonPlan", "PoissonSolver", "make_plan",
+           "get_solver", "clear_solver_cache", "solver_cache_info",
+           "set_solver_cache_capacity"]
 
 
 @dataclass(frozen=True)
@@ -328,6 +332,12 @@ class PoissonSolver:
     """u = solve(f): FFT-based solution of lap(u) = f with mixed BCs.
 
     ``engine``: "xla" (default) or "pallas" -- see ``repro.core.engine``.
+
+    ``solve`` accepts ``f`` of shape ``(*grid)`` (one rhs) or ``(B, *grid)``
+    (B independent right-hand sides sharing this plan, solved in ONE fused
+    pipeline -- same transform count, bigger row batches).  One jit
+    specialization exists per input rank/shape; the plan, schedule and
+    Green's function are shared by all of them.
     """
 
     def __init__(self, shape, L, bcs, layout=DataLayout.CELL,
@@ -359,5 +369,103 @@ class PoissonSolver:
 
     def solve(self, f):
         f = jnp.asarray(f)
-        assert f.shape == self.input_shape, (f.shape, self.input_shape)
+        grid = self.input_shape
+        assert (f.ndim in (len(grid), len(grid) + 1)
+                and f.shape[f.ndim - len(grid):] == grid), (f.shape, grid)
         return self._solve(f)
+
+
+# ---------------------------------------------------------------------------
+# global plan/solver cache
+# ---------------------------------------------------------------------------
+#
+# A CFD-style driver (e.g. a vortex-method timestepper, or the launch CLI
+# re-entered every step) constructs the SAME solver over and over: identical
+# shape/L/bcs/layout/green/engine/comm.  Planning is not free -- Green's
+# function assembly is O(N^3) numpy work, autotuning compiles candidate
+# pipelines, and every fresh ``jax.jit`` wrapper restarts XLA compilation.
+# ``get_solver`` memoizes fully-constructed solvers in a module-level LRU
+# keyed by the complete plan identity, so repeated construction costs a
+# dict lookup and the jit/plan/Green work happens once per process.
+
+_SOLVER_CACHE: OrderedDict = OrderedDict()
+_SOLVER_CACHE_LOCK = threading.Lock()
+_SOLVER_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+_SOLVER_CACHE_CAPACITY = 16
+
+
+def _freeze(v):
+    """Canonical hashable form of one get_solver argument."""
+    if isinstance(v, (list, tuple)):
+        return tuple(_freeze(x) for x in v)
+    if isinstance(v, dict):
+        return tuple(sorted((k, _freeze(x)) for k, x in v.items()))
+    try:
+        hash(v)
+        return v
+    except TypeError:
+        return repr(v)
+
+
+def get_solver(shape, L, bcs, layout=DataLayout.CELL,
+               green_kind=gr.GreenKind.CHAT2, eps_factor=2.0,
+               engine="xla", *, mesh=None, **kw):
+    """Construct-or-fetch a solver from the global plan cache.
+
+    Returns a ``PoissonSolver``, or a ``DistributedPoissonSolver`` when
+    ``mesh`` is given (extra distributed keywords -- ``comm``, ``axes``,
+    ``batch_axis``, ``dtype``, autotune knobs, ... -- pass through and are
+    part of the cache key, as is the mesh itself: same devices + same axis
+    names hit the same entry).  Entries are evicted least-recently-used
+    beyond ``set_solver_cache_capacity`` (default 16 solvers).
+    """
+    key = ("dist" if mesh is not None else "single",
+           _freeze(shape), _freeze(L), _freeze(bcs), _freeze(layout),
+           _freeze(green_kind), float(eps_factor),
+           as_engine(engine), _freeze(mesh), _freeze(kw))
+    with _SOLVER_CACHE_LOCK:
+        s = _SOLVER_CACHE.get(key)
+        if s is not None:
+            _SOLVER_CACHE.move_to_end(key)
+            _SOLVER_CACHE_STATS["hits"] += 1
+            return s
+        _SOLVER_CACHE_STATS["misses"] += 1
+    if mesh is not None:
+        from repro.distributed.pencil import DistributedPoissonSolver
+        s = DistributedPoissonSolver(shape, L, bcs, layout, green_kind,
+                                     mesh=mesh, eps_factor=eps_factor,
+                                     engine=engine, **kw)
+    else:
+        assert not kw, f"unexpected single-process solver kwargs: {kw}"
+        s = PoissonSolver(shape, L, bcs, layout, green_kind, eps_factor,
+                          engine=engine)
+    with _SOLVER_CACHE_LOCK:
+        _SOLVER_CACHE[key] = s
+        _SOLVER_CACHE.move_to_end(key)
+        while len(_SOLVER_CACHE) > _SOLVER_CACHE_CAPACITY:
+            _SOLVER_CACHE.popitem(last=False)
+            _SOLVER_CACHE_STATS["evictions"] += 1
+    return s
+
+
+def clear_solver_cache():
+    with _SOLVER_CACHE_LOCK:
+        _SOLVER_CACHE.clear()
+        for k in _SOLVER_CACHE_STATS:
+            _SOLVER_CACHE_STATS[k] = 0
+
+
+def solver_cache_info() -> dict:
+    with _SOLVER_CACHE_LOCK:
+        return dict(_SOLVER_CACHE_STATS, size=len(_SOLVER_CACHE),
+                    capacity=_SOLVER_CACHE_CAPACITY)
+
+
+def set_solver_cache_capacity(n: int):
+    global _SOLVER_CACHE_CAPACITY
+    assert n >= 1, n
+    with _SOLVER_CACHE_LOCK:
+        _SOLVER_CACHE_CAPACITY = int(n)
+        while len(_SOLVER_CACHE) > _SOLVER_CACHE_CAPACITY:
+            _SOLVER_CACHE.popitem(last=False)
+            _SOLVER_CACHE_STATS["evictions"] += 1

@@ -67,6 +67,15 @@ class DistributedPoissonSolver:
     fields, the multi-pod configuration).
     ``comm``: a ``CommConfig``, a strategy name, or ``"auto"`` (plan-time
     autotuned; see module docstring).
+
+    Batched multi-RHS execution: ``solve`` also accepts ``f`` with ONE
+    extra leading batch dimension carried in-block (replicated over the
+    mesh, not sharded): ``(B, *grid)``, or ``(B_pod, B, *grid)`` when
+    ``batch_axis`` is set.  All B right-hand sides ride through the same
+    topology switches -- same number of collectives, B-fold payload -- and
+    the chunked comm strategies treat the batch axis as a free chunk axis
+    (no zero-padding when ``B % n_chunks == 0``).  One jit specialization
+    exists per input rank; plan, Green and autotuned comm are shared.
     """
 
     def __init__(self, shape, L, bcs, layout=DataLayout.CELL,
@@ -111,15 +120,13 @@ class DistributedPoissonSolver:
 
         spec_in = [None, None, None]
         spec_in[d1], spec_in[d2] = axes[0], axes[1]
+        self._spec_in_tail = tuple(spec_in)
         spec_g = [None, None, None]
         spec_g[d0], spec_g[d1] = axes[0], axes[1]
         # the Green's function never carries the batch axis (vmap broadcasts
         # it), so its spec is the same with or without batch parallelism
         self.g_spec = P(*spec_g)
-        if batch_axis is not None:
-            self.in_spec = P(batch_axis, *spec_in)
-        else:
-            self.in_spec = P(*spec_in)
+        self.in_spec = self.input_spec(local_batch=False)
         self._green_dev = None
 
         if isinstance(comm, str) and comm == "auto":
@@ -127,7 +134,8 @@ class DistributedPoissonSolver:
                                        autotune_batch)
         else:
             self.comm = as_comm(comm)
-        self._jit = self._build_jit(self.comm, donate=True)
+        self._jits = {}
+        self._jit = self.jit_for(local_batch=False)
 
     # -- local (per-shard) pipeline ----------------------------------------
 
@@ -137,37 +145,63 @@ class DistributedPoissonSolver:
         a1, a2 = self.axes
         U, S = self._U, self._S
         strat = make_strategy(cfg)
+        # leading batch axes (multi-RHS) shift every grid-dim index; they
+        # are also the chunked strategies' preferred (free) chunk axis
+        off = x.ndim - len(self.plan.dirs)
+        ca = 0 if off else None
+        e0, e1, e2 = d0 + off, d1 + off, d2 + off
 
         # forward sweep: every switch carries the next direction's transform
         # as its post continuation (crop the gathered axis, then transform)
         x = sched.fwd_chunk(x, d0)
-        x = _pad_dim(x, d0, self._PS0)
+        x = _pad_dim(x, e0, self._PS0)
         x = strat.stage(
-            x, a1, d0, d1,
-            post=lambda c: sched.fwd_chunk(_crop_dim(c, d1, U[d1]), d1))
-        x = _pad_dim(x, d1, self._PS1)
+            x, a1, e0, e1, chunk_axis=ca,
+            post=lambda c: sched.fwd_chunk(_crop_dim(c, e1, U[d1]), d1))
+        x = _pad_dim(x, e1, self._PS1)
         x = strat.stage(
-            x, a2, d1, d2,
-            post=lambda c: sched.fwd_chunk(_crop_dim(c, d2, U[d2]), d2))
+            x, a2, e1, e2, chunk_axis=ca,
+            post=lambda c: sched.fwd_chunk(_crop_dim(c, e2, U[d2]), d2))
 
         x = sched.green_multiply(x, green)
 
         x = sched.bwd_chunk(x, d2)
-        x = _pad_dim(x, d2, self._PU2)
+        x = _pad_dim(x, e2, self._PU2)
         x = strat.stage(
-            x, a2, d2, d1,
-            post=lambda c: sched.bwd_chunk(_crop_dim(c, d1, S[d1]), d1))
-        x = _pad_dim(x, d1, self._PU1)
+            x, a2, e2, e1, chunk_axis=ca,
+            post=lambda c: sched.bwd_chunk(_crop_dim(c, e1, S[d1]), d1))
+        x = _pad_dim(x, e1, self._PU1)
         x = strat.stage(
-            x, a1, d1, d0,
-            post=lambda c: sched.bwd_chunk(_crop_dim(c, d0, S[d0]), d0))
+            x, a1, e1, e0, chunk_axis=ca,
+            post=lambda c: sched.bwd_chunk(_crop_dim(c, e0, S[d0]), d0))
         if jnp.iscomplexobj(x):
             x = x.real
         return x.astype(self.dtype)
 
     # -- jit assembly --------------------------------------------------------
 
-    def _build_jit(self, cfg: CommConfig, donate: bool):
+    def input_spec(self, local_batch: bool = False) -> P:
+        """PartitionSpec of the input field: optional pod-sharded batch,
+        optional replicated in-block batch, then the pencil grid."""
+        parts = []
+        if self.batch_axis is not None:
+            parts.append(self.batch_axis)
+        if local_batch:
+            parts.append(None)
+        return P(*parts, *self._spec_in_tail)
+
+    def jit_for(self, local_batch: bool = False, donate: bool = True):
+        """The jitted distributed solve for one input rank (cached)."""
+        key = (bool(local_batch), bool(donate))
+        fn = self._jits.get(key)
+        if fn is None:
+            fn = self._build_jit(self.comm, donate=donate,
+                                 local_batch=local_batch)
+            self._jits[key] = fn
+        return fn
+
+    def _build_jit(self, cfg: CommConfig, donate: bool,
+                   local_batch: bool = False):
         """shard_map + jit of the local pipeline under one comm config."""
         local = partial(self._local_solve, cfg=cfg)
         if self.batch_axis is not None:
@@ -181,10 +215,11 @@ class DistributedPoissonSolver:
             import inspect
             if "check_rep" in inspect.signature(shard_map).parameters:
                 smap_kw["check_rep"] = False
+        in_spec = self.input_spec(local_batch)
         fn = shard_map(
             local, mesh=self.mesh,
-            in_specs=(self.in_spec, self.g_spec),
-            out_specs=self.in_spec, **smap_kw)
+            in_specs=(in_spec, self.g_spec),
+            out_specs=in_spec, **smap_kw)
         return jax.jit(fn, donate_argnums=(0,) if donate else ())
 
     # -- plan-time comm autotuner (flups switchsort analogue) ----------------
@@ -203,20 +238,27 @@ class DistributedPoissonSolver:
 
     def _autotune(self, candidates, cache_path, batch=None,
                   reps: int = 3) -> CommConfig:
-        # timed workload: per-shard batch 1 unless the caller states the
-        # production batch (``autotune_batch``); the timed extent is part
-        # of the cache key, so differently-sized tunings never collide
+        # timed workload must match the production rank: the pod-sharded
+        # batch (default: the pod mesh extent) when ``batch_axis`` is set,
+        # or the IN-BLOCK multi-RHS batch when the caller states it
+        # (``autotune_batch`` on a 2-axis mesh) -- otherwise the tuner
+        # would time the unbatched pipeline and could cache an n_chunks
+        # that does not divide B, silently losing the free batch-axis
+        # chunking in production.  The timed extent is part of the cache
+        # key, so differently-sized tunings never collide.
+        local_batch = False
         if self.batch_axis is None:
-            batch = None
+            local_batch = batch is not None
         elif batch is None:
             batch = self.mesh.shape[self.batch_axis]
         fshape = self.padded_input_shape(batch)
         gsd = self._green_np
+        in_spec = self.input_spec(local_batch)
 
         def time_cfg(cfg):
-            fn = self._build_jit(cfg, donate=False)
+            fn = self._build_jit(cfg, donate=False, local_batch=local_batch)
             f = jax.device_put(jnp.ones(fshape, self.dtype),
-                               NamedSharding(self.mesh, self.in_spec))
+                               NamedSharding(self.mesh, in_spec))
             # lazy_green dry-runs autotune against a zero kernel: comm cost
             # does not depend on the Green's values, only its layout
             if isinstance(gsd, jax.ShapeDtypeStruct):
@@ -255,7 +297,7 @@ class DistributedPoissonSolver:
 
     def _pad_input(self, f):
         d0, d1, d2 = self.plan.order
-        off = 1 if self.batch_axis is not None else 0
+        off = f.ndim - 3
         f = _pad_dim(f, d1 + off, self._PU1)
         f = _pad_dim(f, d2 + off, self._PU2)
         return f
@@ -268,23 +310,51 @@ class DistributedPoissonSolver:
         return self._green_dev
 
     def solve(self, f):
-        """f: global field (optionally with a leading batch dim)."""
+        """f: global field, optionally with leading batch dims.
+
+        Accepted ranks: ``(*grid)``; ``(B, *grid)`` (in-block multi-RHS
+        batch, or the pod-sharded batch when ``batch_axis`` is set);
+        ``(B_pod, B, *grid)`` (both).
+        """
         f = jnp.asarray(f, dtype=self.dtype)
+        base = 3 + (1 if self.batch_axis is not None else 0)
+        assert f.ndim in (base, base + 1), (f.shape, base)
+        local_batch = f.ndim == base + 1
         f = self._pad_input(f)
-        f = jax.device_put(f, NamedSharding(self.mesh, self.in_spec))
-        out = self._jit(f, self.green_device())
+        spec = self.input_spec(local_batch)
+        f = jax.device_put(f, NamedSharding(self.mesh, spec))
+        out = self.jit_for(local_batch)(f, self.green_device())
         d0, d1, d2 = self.plan.order
-        off = 1 if self.batch_axis is not None else 0
+        off = out.ndim - 3
         out = _crop_dim(out, d1 + off, self._U[d1])
         out = _crop_dim(out, d2 + off, self._U[d2])
         return out
 
-    def lower(self, batch=None, dtype=None):
-        """Lower the jitted distributed solve with ShapeDtypeStructs (dry-run)."""
+    def lower(self, batch=None, dtype=None, *, local_batch: bool = False):
+        """Lower the jitted distributed solve with ShapeDtypeStructs (dry-run).
+
+        ``batch`` sizes the leading batch dims: an int for the single one
+        in play (the pod-sharded dim when ``batch_axis`` is set, else the
+        in-block multi-RHS dim under ``local_batch=True``), or a
+        ``(pod, local)`` pair when both are present.  Missing leading dims
+        default to 1 so the lowered rank always matches the input spec.
+        """
         dtype = dtype or self.dtype
-        shp = self.padded_input_shape(batch)
+        defaults = []           # leading dims in order: pod-sharded, local
+        if self.batch_axis is not None:
+            defaults.append(int(self.mesh.shape[self.batch_axis]))
+        if local_batch:
+            defaults.append(1)
+        n_lead = len(defaults)
+        lead = () if batch is None else (
+            tuple(batch) if isinstance(batch, (tuple, list)) else (batch,))
+        if len(lead) < n_lead:
+            lead = tuple(defaults[:n_lead - len(lead)]) + lead
+        assert len(lead) == n_lead, (batch, self.batch_axis, local_batch)
+        shp = lead + self.padded_input_shape()
+        spec = self.input_spec(local_batch)
         f = jax.ShapeDtypeStruct(shp, dtype,
-                                 sharding=NamedSharding(self.mesh, self.in_spec))
+                                 sharding=NamedSharding(self.mesh, spec))
         g = jax.ShapeDtypeStruct(self._green_np.shape, self._green_np.dtype,
                                  sharding=NamedSharding(self.mesh, self.g_spec))
-        return self._jit.lower(f, g)
+        return self.jit_for(local_batch).lower(f, g)

@@ -36,19 +36,27 @@ def green_multiply(fhat, green, scale: float = 1.0, interpret: bool = True):
     """Complex (or real) spectral field times real Green + norm factor.
 
     The only O(N^3) pointwise pass of the solve: one fused kernel instead
-    of separate Green / normalization multiplies.
+    of separate Green / normalization multiplies.  ``fhat`` may carry
+    leading batch axes over a shared ``green`` (multi-RHS solves): the
+    kernel then grids over the flattened batch instead of broadcasting the
+    Green plane into a batched HBM copy.
     """
     shp = fhat.shape
-    rows, lanes = _rows(shp), shp[-1]
+    bnd = fhat.ndim - green.ndim
+    grows, lanes = _rows(green.shape), green.shape[-1]
+    batch = 1
+    for s in shp[:bnd]:
+        batch *= s
+    kshape = (batch, grows, lanes) if bnd else (grows, lanes)
     if jnp.iscomplexobj(fhat):
         rdt = jnp.float64 if fhat.dtype == jnp.complex128 else jnp.float32
-        g2 = green.reshape(rows, lanes).astype(rdt)
-        re = fhat.real.reshape(rows, lanes).astype(rdt)
-        im = fhat.imag.reshape(rows, lanes).astype(rdt)
+        g2 = green.reshape(grows, lanes).astype(rdt)
+        re = fhat.real.reshape(kshape).astype(rdt)
+        im = fhat.imag.reshape(kshape).astype(rdt)
         orr, oi = spectral_scale(re, im, g2, scale, interpret=interpret)
         return (orr + 1j * oi).reshape(shp).astype(fhat.dtype)
-    g2 = green.reshape(rows, lanes).astype(fhat.dtype)
-    re = fhat.reshape(rows, lanes)
+    g2 = green.reshape(grows, lanes).astype(fhat.dtype)
+    re = fhat.reshape(kshape)
     orr, _ = spectral_scale(re, re, g2, scale, interpret=interpret)
     return orr.reshape(shp).astype(fhat.dtype)
 

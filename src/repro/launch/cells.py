@@ -172,7 +172,7 @@ def build_cell(arch: str, shape_name: str, mesh,
 def _build_poisson_cell(shape_name, mesh, comm):
     from repro.core.comm import autotune_candidates
     from repro.configs.flups_poisson import CONFIG
-    from repro.distributed.pencil import DistributedPoissonSolver
+    from repro.core.solver import get_solver
     multi = "pod" in mesh.shape
     # precedence: a launcher comm that differs from the stock default wins;
     # otherwise the arch config's knobs apply (comm="auto" = plan-time
@@ -180,7 +180,13 @@ def _build_poisson_cell(shape_name, mesh, comm):
     if comm == CommConfig():
         comm = ("auto" if CONFIG.comm == "auto"
                 else CommConfig(CONFIG.comm, CONFIG.comm_chunks))
-    solver = DistributedPoissonSolver(
+    # single-pod meshes run CONFIG.batch fields as ONE batched multi-RHS
+    # solve (in-block batch axis); multi-pod shards the batch over "pod"
+    local_batch = not multi and CONFIG.batch > 1
+    batch = CONFIG.batch if (multi or local_batch) else None
+    # the global plan cache makes cell re-construction (reprobe sweeps,
+    # repeated dryruns over the same mesh) hit one live solver instance
+    solver = get_solver(
         (CONFIG.n,) * 3, 1.0, CONFIG.bcs, layout=CONFIG.layout,
         green_kind=CONFIG.green, mesh=mesh,
         axes=("data", "model"), comm=comm,
@@ -188,19 +194,21 @@ def _build_poisson_cell(shape_name, mesh, comm):
         engine=CONFIG.engine,
         autotune_candidates=autotune_candidates(
             CONFIG.comm_autotune_max_chunks),
-        autotune_cache=CONFIG.comm_autotune_cache or None)
-    batch = CONFIG.batch if multi else None
+        autotune_cache=CONFIG.comm_autotune_cache or None,
+        # comm="auto" must time the rank it will run: the in-block batch
+        autotune_batch=CONFIG.batch if local_batch else None)
     f_sds = jax.ShapeDtypeStruct(
         solver.padded_input_shape(batch), jnp.float32,
-        sharding=NamedSharding(mesh, solver.in_spec))
+        sharding=NamedSharding(mesh, solver.input_spec(local_batch)))
     g_sds = jax.ShapeDtypeStruct(
         solver._green_np.shape, solver._green_np.dtype,
         sharding=NamedSharding(mesh, solver.g_spec))
     n = CONFIG.n
     meta = {"arch": "flups-poisson", "shape": shape_name, "kind": "solve",
             "grid": n, "mesh": tuple(mesh.shape.items()),
+            "batch": batch or 1,
             # forward + backward 3-D FFT on the doubled (2n)^3 domain
             "model_flops": (batch or 1) * 2 * 5 * (2 * n) ** 3
             * np.log2((2 * n) ** 3)}
-    return Cell("flups-poisson", shape_name, solver._jit,
+    return Cell("flups-poisson", shape_name, solver.jit_for(local_batch),
                 (f_sds, g_sds), meta)

@@ -30,6 +30,12 @@ def main(argv=None):
     ap.add_argument("--green", default="chat2")
     ap.add_argument("--engine", default="xla", choices=["xla", "pallas"],
                     help="transform engine: pure XLA or the Pallas kernels")
+    ap.add_argument("--batch", type=int, default=1,
+                    help="right-hand sides per solve (batched multi-RHS "
+                         "pipeline when > 1)")
+    ap.add_argument("--steps", type=int, default=1,
+                    help="driver steps; each step re-acquires the solver "
+                         "through the global plan cache (CFD-loop shape)")
     ap.add_argument("--repeats", type=int, default=3)
     args = ap.parse_args(argv)
 
@@ -44,7 +50,7 @@ def main(argv=None):
     import jax.numpy as jnp
     from repro.core.bc import BCType, DataLayout
     from repro.core.comm import CommConfig
-    from repro.distributed.pencil import DistributedPoissonSolver
+    from repro.core.solver import get_solver, solver_cache_info
 
     E, O, P, U = BCType.EVEN, BCType.ODD, BCType.PER, BCType.UNB
     bcs = {"unb": ((U, U),) * 3,
@@ -59,7 +65,7 @@ def main(argv=None):
     mesh = jax.make_mesh((args.p1, args.p2), ("data", "model"))
     comm = ("auto" if args.comm == "auto"
             else CommConfig(strategy=args.comm, n_chunks=args.chunks))
-    solver = DistributedPoissonSolver(
+    solver = get_solver(
         (args.n,) * 3, 1.0, bcs, layout=layout, green_kind=args.green,
         mesh=mesh, comm=comm, dtype=jnp.float64,
         engine=args.engine)
@@ -91,18 +97,30 @@ def main(argv=None):
             np.cos(2 * np.pi * z)
         rhs = -(4 + 16 + 4) * np.pi ** 2 * sol
 
+    if args.batch > 1:
+        rhs = np.broadcast_to(rhs, (args.batch,) + rhs.shape).copy()
+
     u = solver.solve(rhs)          # compile + warm
     u.block_until_ready()
     t0 = time.time()
-    for _ in range(args.repeats):
+    for step in range(max(args.repeats, args.steps)):
+        # CFD-driver shape: every step re-acquires the (cached) solver
+        solver = get_solver(
+            (args.n,) * 3, 1.0, bcs, layout=layout, green_kind=args.green,
+            mesh=mesh, comm=comm, dtype=jnp.float64, engine=args.engine)
         u = solver.solve(rhs)
         u.block_until_ready()
-    dt = (time.time() - t0) / args.repeats
-    err = float(np.max(np.abs(np.asarray(u) - sol)))
+    reps = max(args.repeats, args.steps)
+    dt = (time.time() - t0) / reps
+    u0 = np.asarray(u[0] if args.batch > 1 else u)
+    err = float(np.max(np.abs(u0 - sol)))
     thr = rhs.size * 8 / dt / 1e6 / n_dev
+    ci = solver_cache_info()
     print(f"[solve] n={args.n}^3 grid, ({args.p1}x{args.p2}) pencils, "
-          f"comm={args.comm}, engine={args.engine}: {dt*1e3:.1f} ms/solve, "
-          f"E_inf={err:.3e}, throughput {thr:.1f} MB/s/rank")
+          f"comm={args.comm}, engine={args.engine}, batch={args.batch}: "
+          f"{dt*1e3:.1f} ms/solve, E_inf={err:.3e}, "
+          f"throughput {thr:.1f} MB/s/rank, "
+          f"plan-cache {ci['hits']} hits / {ci['misses']} misses")
     return err
 
 

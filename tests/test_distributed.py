@@ -47,6 +47,15 @@ for strategy in ("a2a", "pipelined", "fused", "overlap"):
     got = np.asarray(ds.solve(f))
     err = np.max(np.abs(got - want))
     assert err < 1e-10, (strategy, err)
+    # in-block multi-RHS batch: solve((B, *grid)) == stacked single solves
+    # (B=4 divides n_chunks=2 -> chunked strategies cut along the batch)
+    if cfg.get("local_batch"):
+        scales = (1.0, -0.5, 2.0, 0.25)
+        fb = np.stack([a * f for a in scales])
+        gotb = np.asarray(ds.solve(fb))
+        for a, g1 in zip(scales, gotb):
+            errb = np.max(np.abs(g1 - a * want))
+            assert errb < 1e-9, (strategy, "local_batch", errb)
     # batched (multi-pod style): 2 fields over an extra mesh axis
     if cfg.get("batch"):
         mesh3 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
@@ -103,10 +112,10 @@ CASES = [
     dict(bcs=[("EVEN", "EVEN"), ("ODD", "EVEN"), ("PER", "PER")],
          layout="NODE", n=16, green="chat2", batch=True),
     dict(bcs=[("EVEN", "EVEN"), ("ODD", "EVEN"), ("PER", "PER")],
-         layout="CELL", n=16, green="chat2", auto=True),
+         layout="CELL", n=16, green="chat2", auto=True, local_batch=True),
     # fully unbounded (domain doubling through the switches)
     dict(bcs=[("UNB", "UNB"), ("UNB", "UNB"), ("UNB", "UNB")],
-         layout="NODE", n=16, green="chat2"),
+         layout="NODE", n=16, green="chat2", local_batch=True),
     # semi-unbounded + unbounded mix (paper case C)
     dict(bcs=[("UNB", "EVEN"), ("UNB", "UNB"), ("ODD", "UNB")],
          layout="CELL", n=16, green="hej2"),

@@ -92,6 +92,38 @@ def test_green_multiply_f64_preserves_precision():
     np.testing.assert_allclose(np.asarray(got), f * g, rtol=1e-14, atol=1e-14)
 
 
+@pytest.mark.parametrize("batch", [1, 3])
+@pytest.mark.parametrize("complex_field", [True, False])
+def test_green_multiply_batched_shares_green_plane(batch, complex_field):
+    """(B, *spec) field against ONE (*spec) Green: the kernel grids over
+    the batch instead of broadcasting the Green into an HBM copy, and
+    matches the broadcasted direct product."""
+    rng = np.random.default_rng(9)
+    shp = (4, 6, 128)
+    if complex_field:
+        f = (rng.standard_normal((batch,) + shp)
+             + 1j * rng.standard_normal((batch,) + shp)).astype(np.complex64)
+    else:
+        f = rng.standard_normal((batch,) + shp).astype(np.float32)
+    g = rng.standard_normal(shp).astype(np.float32)
+    got = ops.green_multiply(jnp.asarray(f), jnp.asarray(g), 0.5)
+    np.testing.assert_allclose(np.asarray(got), f * g * 0.5, rtol=2e-6,
+                               atol=1e-6)
+
+
+def test_spectral_scale_batched_grid():
+    rng = np.random.default_rng(10)
+    re, im = (rng.standard_normal((3, 16, 256)).astype(np.float32)
+              for _ in range(2))
+    g = rng.standard_normal((16, 256)).astype(np.float32)
+    got_r, got_i = spectral_scale(jnp.asarray(re), jnp.asarray(im),
+                                  jnp.asarray(g), 0.37)
+    np.testing.assert_allclose(np.asarray(got_r), re * g * 0.37, rtol=2e-6,
+                               atol=1e-6)
+    np.testing.assert_allclose(np.asarray(got_i), im * g * 0.37, rtol=2e-6,
+                               atol=1e-6)
+
+
 @pytest.mark.parametrize("n", [16, 64, 256])
 def test_rfft_pallas_matches_jnp(n):
     rng = np.random.default_rng(6)

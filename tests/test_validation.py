@@ -1,0 +1,260 @@
+"""Analytical validation net: the paper's convergence study on closed-form
+Gaussian-blob solutions (section IV), for the three domain families:
+
+  * fully unbounded     -- Gaussian blob; u(r) = -Q erf(r / (sqrt(2) s))
+                           / (4 pi r), the classic smoothed point potential
+  * semi-unbounded      -- blob + its mirror image through the bounded end
+                           (+ for an EVEN end, - for an ODD end): exactly
+                           the Hockney mirror the solver imposes
+  * fully periodic      -- wrapped (periodized) Gaussian, compared up to
+                           the pinned zero mode
+
+Each family asserts the OBSERVED convergence order over a 3-grid
+refinement (least-squares slope): approaching 2 for CHAT2 (the paper's
+2nd-order spectral-truncation kernel) and the high design orders for the
+regularized HEJ4/HEJ6 kernels (paper Figs 6-8), on both CELL and NODE
+layouts.  Thresholds carry the repo's standard preasymptotic slack (the
+paper's own figures approach the design order from below at these
+resolutions); the measured slopes are recorded in EXPERIMENTS.md
+section "Validation".
+
+Heavier grids are ``slow``-marked; CI runs them in the dedicated
+``validation`` job.
+"""
+import numpy as np
+import pytest
+from scipy.special import erf
+
+from repro.core.bc import BCType, DataLayout
+from repro.core.green import GreenKind
+from repro.core.solver import get_solver
+
+E, O, P, U = BCType.EVEN, BCType.ODD, BCType.PER, BCType.UNB
+L = 1.0
+SIGMA = L / 10.0          # blob width: 5 sigma to the nearest boundary --
+                          # domain-truncation floor ~1e-8, far below every
+                          # asserted error level
+CENTER = (0.5 * L, 0.5 * L, 0.5 * L)
+
+
+def grid1d(n, layout):
+    h = L / n
+    if layout == DataLayout.NODE:
+        return np.arange(n + 1) * h
+    return (np.arange(n) + 0.5) * h
+
+
+def grids(n, layout):
+    x = grid1d(n, layout)
+    return np.meshgrid(x, x, x, indexing="ij")
+
+
+# ---------------------------------------------------------------------------
+# closed-form fields
+# ---------------------------------------------------------------------------
+
+def gauss_rhs(x, y, z, c=CENTER, s=SIGMA):
+    r2 = (x - c[0]) ** 2 + (y - c[1]) ** 2 + (z - c[2]) ** 2
+    return np.exp(-r2 / (2.0 * s * s))
+
+
+def gauss_potential(x, y, z, c=CENTER, s=SIGMA):
+    """Exact solution of lap(u) = gauss_rhs on free space.
+
+    u(r) = -Q erf(r / (sqrt(2) s)) / (4 pi r),  Q = (2 pi)^{3/2} s^3;
+    the removable r -> 0 singularity is filled with the analytic limit.
+    """
+    r = np.sqrt((x - c[0]) ** 2 + (y - c[1]) ** 2 + (z - c[2]) ** 2)
+    q = (2.0 * np.pi) ** 1.5 * s ** 3
+    near = r < 1e-12
+    rs = np.where(near, 1.0, r)
+    u = -q * erf(rs / (np.sqrt(2.0) * s)) / (4.0 * np.pi * rs)
+    u0 = -q * 2.0 / (np.sqrt(2.0 * np.pi) * s) / (4.0 * np.pi)
+    return np.where(near, u0, u)
+
+
+def case_unbounded(n, layout):
+    x, y, z = grids(n, layout)
+    return gauss_rhs(x, y, z), gauss_potential(x, y, z)
+
+
+def case_semi_even(n, layout):
+    """x: (UNB, EVEN) -- bounded even end at x = L; y, z fully unbounded.
+
+    The even symmetry mirrors the blob through x = L: the exact solution
+    adds the image blob's free-space potential (center 2L - cx)."""
+    x, y, z = grids(n, layout)
+    rhs = gauss_rhs(x, y, z)
+    cimg = (2.0 * L - CENTER[0], CENTER[1], CENTER[2])
+    sol = gauss_potential(x, y, z) + gauss_potential(x, y, z, c=cimg)
+    return rhs, sol
+
+
+def case_semi_odd(n, layout):
+    """z: (ODD, UNB) -- bounded odd end at z = 0: image enters negated."""
+    x, y, z = grids(n, layout)
+    rhs = gauss_rhs(x, y, z)
+    cimg = (CENTER[0], CENTER[1], -CENTER[2])
+    sol = gauss_potential(x, y, z) - gauss_potential(x, y, z, c=cimg)
+    return rhs, sol
+
+
+def _wrapped(x, c, s, deriv2=False, images=4):
+    """Periodized 1-D Gaussian (or its 2nd derivative), K images each way."""
+    acc = np.zeros_like(x)
+    for k in range(-images, images + 1):
+        d = x - c + k * L
+        g = np.exp(-d * d / (2.0 * s * s))
+        if deriv2:
+            acc += g * (d * d / s ** 4 - 1.0 / s ** 2)
+        else:
+            acc += g
+    return acc
+
+
+def case_periodic(s):
+    """Fully periodic wrapped-Gaussian product; exact up to the zero mode
+    (the solver pins the mean of u to zero, so the comparison does too)."""
+    def build(n, layout):
+        x1 = grid1d(n, layout)
+        w = [_wrapped(x1, c, s) for c in CENTER]
+        w2 = [_wrapped(x1, c, s, deriv2=True) for c in CENTER]
+
+        def outer3(a, b, c):
+            return (a[:, None, None] * b[None, :, None]
+                    * c[None, None, :])
+
+        sol = outer3(w[0], w[1], w[2])
+        rhs = (outer3(w2[0], w[1], w[2]) + outer3(w[0], w2[1], w[2])
+               + outer3(w[0], w[1], w2[2]))
+        mean = (np.sqrt(2.0 * np.pi) * s / L) ** 3   # analytic domain mean
+        return rhs, sol - mean
+    return build
+
+
+CASES = {
+    "unb": (case_unbounded, ((U, U), (U, U), (U, U))),
+    "semi-even": (case_semi_even, ((U, E), (U, U), (U, U))),
+    "semi-odd": (case_semi_odd, ((U, U), (U, U), (O, U))),
+    # narrow blob: CHAT2's error is pure rhs-sampling aliasing here
+    "per": (case_periodic(L / 8.0), ((P, P), (P, P), (P, P))),
+    # wide blob: puts the regularized HEJ kernels in their asymptotic range
+    # on cheap periodic grids (no domain doubling)
+    "per-wide": (case_periodic(L / 4.0), ((P, P), (P, P), (P, P))),
+}
+
+
+def linf_error(case, n, layout, green):
+    fn, bcs = CASES[case]
+    rhs, sol = fn(n, layout)
+    s = get_solver((n, n, n), L, bcs, layout=layout, green_kind=green)
+    u = np.asarray(s.solve(rhs.astype(np.float64)))
+    return float(np.max(np.abs(u - sol)))
+
+
+def observed_order(case, layout, green, ns):
+    """Least-squares slope of log(err) against log(n) over the 3 grids."""
+    errs = [linf_error(case, n, layout, green) for n in ns]
+    p = -np.polyfit(np.log(ns), np.log(errs), 1)[0]
+    return p, errs
+
+
+LAYOUTS = [DataLayout.NODE, DataLayout.CELL]
+
+
+# ---------------------------------------------------------------------------
+# fully unbounded (paper Fig 6)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_unbounded_chat2_order2(layout):
+    # measured: 1.86 (NODE) / 1.72 (CELL), approaching 2 from below --
+    # the repo-standard CHAT2 slack (cf. tests/test_poisson.py)
+    p, errs = observed_order("unb", layout, GreenKind.CHAT2, ns=(16, 24, 32))
+    assert p > 1.55, (p, errs)
+    assert errs[0] > errs[1] > errs[2], errs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_unbounded_hej4_order(layout):
+    p, errs = observed_order("unb", layout, GreenKind.HEJ4, ns=(32, 48, 64))
+    assert p > 3.15, (p, errs)        # measured 3.42 / 3.37, design 4
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_unbounded_hej6_order(layout):
+    p, errs = observed_order("unb", layout, GreenKind.HEJ6, ns=(48, 64, 96))
+    assert p > 5.2, (p, errs)         # measured 5.54 / 5.49, design 6
+
+
+# ---------------------------------------------------------------------------
+# semi-unbounded (paper Fig 7): even and odd bounded ends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("case", ["semi-even", "semi-odd"])
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_semi_unbounded_chat2_order2(case, layout):
+    p, errs = observed_order(case, layout, GreenKind.CHAT2, ns=(16, 24, 32))
+    assert p > 1.55, (p, errs)
+    assert errs[0] > errs[1] > errs[2], errs
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_semi_unbounded_hej4_order(layout):
+    p, errs = observed_order("semi-even", layout, GreenKind.HEJ4,
+                             ns=(32, 48, 64))
+    assert p > 3.15, (p, errs)        # measured 3.42 / 3.37
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_semi_unbounded_hej6_order(layout):
+    p, errs = observed_order("semi-even", layout, GreenKind.HEJ6,
+                             ns=(48, 64, 96))
+    assert p > 5.2, (p, errs)         # measured 5.53 / 5.49
+
+
+# ---------------------------------------------------------------------------
+# fully periodic (spectral BCs)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("layout", LAYOUTS)
+def test_periodic_chat2_spectral(layout):
+    """CHAT2 is the exact inverse symbol on periodic boxes: the error is
+    pure rhs-sampling aliasing, decaying super-algebraically (>> order 2)."""
+    p, errs = observed_order("per", layout, GreenKind.CHAT2, ns=(8, 12, 16))
+    assert p > 2.0, (p, errs)
+    assert errs[-1] < 1e-6, errs
+
+
+@pytest.mark.parametrize("green,thresh", [
+    (GreenKind.HEJ4, 3.3),            # measured 3.75, design 4
+    (GreenKind.HEJ6, 5.2),            # measured 5.63, design 6
+])
+def test_periodic_hej_orders(green, thresh):
+    """Regularized kernels on a periodic box keep their design order."""
+    p, errs = observed_order("per-wide", DataLayout.NODE, green,
+                             ns=(24, 32, 48))
+    assert p > thresh, (p, errs)
+
+
+# ---------------------------------------------------------------------------
+# batched validation: the multi-RHS pipeline reproduces the analytical
+# solution for every rhs in the batch (ties the tentpole to the paper net)
+# ---------------------------------------------------------------------------
+
+def test_batched_solve_matches_analytical():
+    n, layout = 24, DataLayout.NODE
+    fn, bcs = CASES["unb"]
+    rhs, sol = fn(n, layout)
+    s = get_solver((n, n, n), L, bcs, layout=layout,
+                   green_kind=GreenKind.CHAT2)
+    scales = np.array([1.0, -2.0, 0.5])
+    fb = np.stack([a * rhs for a in scales])
+    ub = np.asarray(s.solve(fb.astype(np.float64)))
+    ref_err = float(np.max(np.abs(ub[0] - sol)))
+    for a, u in zip(scales, ub):
+        assert np.max(np.abs(u - a * sol)) <= abs(a) * ref_err * (1 + 1e-10)
