@@ -56,16 +56,17 @@ def bench_r2r_paths(quick=True):
         "dst1": TransformKind.DST1, "dst2": TransformKind.DST2,
         "dst3": TransformKind.DST3, "dst4": TransformKind.DST4,
     }
+    from common import interleaved_min
     per_kind = {}
     for name, kind in kinds.items():
         new_fn = jax.jit(lambda v, k=kind: tr.r2r_forward(v, k))
         old_fn = jax.jit(lambda v, k=kind: trf.r2r_forward(v, k))
-        t_new = time_fn(new_fn, x)
-        t_old = time_fn(old_fn, x)
-        err = float(jnp.max(jnp.abs(new_fn(x) - old_fn(x))))
+        err = float(jnp.max(jnp.abs(new_fn(x) - old_fn(x))))  # + warmup
+        best = interleaved_min({"new": lambda: new_fn(x),
+                                "old": lambda: old_fn(x)}, reps=7)
         per_kind[name] = {
-            "old_us": t_old * 1e6, "new_us": t_new * 1e6,
-            "speedup": t_old / t_new, "maxerr_vs_old": err,
+            "old_us": best["old"] * 1e6, "new_us": best["new"] * 1e6,
+            "speedup": best["old"] / best["new"], "maxerr_vs_old": err,
         }
     speedups = [v["speedup"] for v in per_kind.values()]
     return {
@@ -86,6 +87,12 @@ def run(quick=True):
     n = 512 if quick else 2048
     b = 64
 
+    # NOTE: every kern_* row below executes the Pallas kernel in INTERPRET
+    # mode (CPU emulation; no TPU in this environment).  Those timings are
+    # tagged interpret=True in the CSV and the JSON and are excluded from
+    # all speedup claims -- an interpreted kernel measured against a real
+    # jitted reference is not a benchmark, it is a correctness probe with a
+    # wall clock attached.
     re = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
     im = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
     t_kernel = time_fn(fft_stockham, re, im)
@@ -94,29 +101,32 @@ def run(quick=True):
     wr, wi = ref.fft_ref(re, im)
     err = float(jnp.max(jnp.abs(gr - wr)))
     rows.append(("kern_fft_stockham", t_kernel * 1e6,
-                 f"ref_us={t_ref*1e6:.0f};maxerr={err:.1e}"))
+                 f"ref_us={t_ref*1e6:.0f};maxerr={err:.1e}", True))
 
     g = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
     f = (re + 1j * im).astype(jnp.complex64)
     t_kernel = time_fn(ops.green_multiply, f, g, 0.5)
     t_ref = time_fn(lambda a, c: a * c * 0.5, f, g)
     rows.append(("kern_spectral_scale", t_kernel * 1e6,
-                 f"ref_us={t_ref*1e6:.0f}"))
+                 f"ref_us={t_ref*1e6:.0f}", True))
 
     t_kernel = time_fn(ops.dct2_post_twiddle, f)
-    rows.append(("kern_twiddle_pack", t_kernel * 1e6, "interpret"))
+    rows.append(("kern_twiddle_pack", t_kernel * 1e6, "post-twiddle", True))
 
     r2r = bench_r2r_paths(quick=quick)
     rows.append(("r2r_half_spectrum_speedup",
                  r2r["geomean_speedup"],
                  f"old_bytes={r2r['old_bytes_est']};"
-                 f"new_bytes={r2r['new_bytes_est']}"))
+                 f"new_bytes={r2r['new_bytes_est']}", False))
 
     payload = {
         "mode": "quick" if quick else "full",
-        "kernels": {name: {"us": us, "derived": derived}
-                    for name, us, derived in rows if name.startswith("kern")},
-        "r2r_transform_path": r2r,
+        # interpret: true rows are CPU-emulated Pallas timings -- recorded
+        # for trajectory only, NEVER comparable against the jitted refs
+        "kernels": {name: {"us": us, "derived": derived, "interpret": interp}
+                    for name, us, derived, interp in rows
+                    if name.startswith("kern")},
+        "r2r_transform_path": dict(r2r, interpret=False),
         "normalization_folding": {
             # elementwise full-array passes after the spectral multiply:
             # seed = green multiply + one normfact multiply per r2r dir (3);

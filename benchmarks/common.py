@@ -17,7 +17,33 @@ def time_fn(fn, *args, repeats=3, warmup=1, **kw):
     return (time.time() - t0) / repeats
 
 
+def interleaved_min(fns: dict, reps: int = 7) -> dict:
+    """Drift-robust A/B timing: run the zero-arg callables in ``fns``
+    round-robin, alternating which goes first each rep (the second call of
+    a round rides warmed caches), and keep per-tag MINIMA.  Back-to-back
+    blocks on a shared box fold clock drift and ordering bias straight
+    into the ratio; this protocol cancels both.  Callers warm/compile each
+    fn once before handing it in.  Returns {tag: best_seconds}."""
+    best = {tag: float("inf") for tag in fns}
+    order = list(fns)
+    for r in range(reps):
+        for tag in (order if r % 2 == 0 else order[::-1]):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fns[tag]())
+            best[tag] = min(best[tag], time.perf_counter() - t0)
+    return best
+
+
 def emit(rows):
-    """rows: list of (name, us_per_call, derived)."""
-    for name, us, derived in rows:
-        print(f"{name},{us:.1f},{derived}")
+    """rows: list of (name, us_per_call, derived[, interpret]).
+
+    ``interpret`` (optional 4th element) tags rows whose timing comes from
+    a Pallas interpret-mode execution: those numbers are CPU emulation of
+    the kernel body, NOT hardware timings, and must never feed speedup
+    claims (they are rendered as their own CSV column so downstream
+    tooling can filter them).
+    """
+    for row in rows:
+        name, us, derived = row[0], row[1], row[2]
+        interp = row[3] if len(row) > 3 else False
+        print(f"{name},{us:.1f},{derived},{'interpret' if interp else 'real'}")

@@ -19,7 +19,7 @@ def main() -> None:
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma list: convergence,comm,scaling,biot,"
-                         "kernels,roofline,train,batch")
+                         "kernels,roofline,train,batch,solve")
     args = ap.parse_args()
     quick = not args.full
 
@@ -36,9 +36,12 @@ def main() -> None:
         "train": "bench_train",
         "roofline": "bench_roofline",
         "batch": "bench_batch",
+        "solve": "bench_solve",
     }
     only = args.only.split(",") if args.only else list(jobs)
-    print("name,us_per_call,derived")
+    # the trailing column tags interpret-mode (CPU-emulated Pallas) timings,
+    # which are excluded from every speedup claim -- see common.emit
+    print("name,us_per_call,derived,timing")
     for key in only:
         mod = __import__(jobs[key])
         try:

@@ -18,6 +18,10 @@ class PoissonArchConfig:
     green: str
     batch: int = 1              # fields solved per step (data parallel)
     engine: str = "xla"         # transform engine: "xla" | "pallas"
+    # Hockney doubling placement for the unbounded dirs: "deferred" (pruned
+    # transforms + valid-extent topology switches, DESIGN.md #8) or
+    # "upfront" (dense textbook baseline kept for A/B runs)
+    doubling: str = "deferred"
     # topology-switch communication (DESIGN.md #2), applied whenever the
     # launcher passes the stock default strategy:
     # "a2a" | "pipelined" | "fused" | "overlap" | "auto" (plan-time tuner)

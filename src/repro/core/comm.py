@@ -155,12 +155,32 @@ class CommStrategy:
     by any topology switch.  The preference is honored when ``n_chunks``
     divides the axis length exactly (such an axis never needs
     zero-padding); otherwise the usual uninvolved grid axis is used.
+
+    ``valid_extent`` (stage/switch keyword) is the number of LIVE entries
+    along ``split_axis`` -- the pruned/deferred-doubling execution model's
+    contract: anything past it is padding the wire never needs to carry.
+    The strategy crops the split axis down to it and re-pads to the
+    equal-split multiple XLA's all-to-all requires (``axis_sizes``, the
+    {mesh axis name: size} map handed to the constructor).  ``None`` ships
+    the axis as-is (the dense path, and the historical call sites).
     """
 
     name: str = "?"
 
-    def __init__(self, n_chunks: int = 1):
+    def __init__(self, n_chunks: int = 1, axis_sizes=None):
         self.n_chunks = max(int(n_chunks), 1)
+        self.axis_sizes = dict(axis_sizes or {})
+
+    def _prepare(self, x, axis_name, split_axis: int, valid_extent):
+        """Crop ``split_axis`` to its valid extent, then zero-pad to the
+        equal-split length of ``axis_name`` (no-ops when already there)."""
+        if valid_extent is None:
+            return x
+        x = crop_axis(x, split_axis, valid_extent)
+        p = self.axis_sizes.get(axis_name)
+        if p:
+            x = pad_axis(x, split_axis, -(-x.shape[split_axis] // p) * p)
+        return x
 
     def _chunk_axis(self, x, split_axis: int, concat_axis: int,
                     chunk_axis) -> int:
@@ -177,12 +197,13 @@ class CommStrategy:
 
     # -- shared surface ----------------------------------------------------
     def switch(self, x, axis_name, split_axis, concat_axis,
-               chunk_axis=None):
+               chunk_axis=None, valid_extent=None):
         return self.stage(x, axis_name, split_axis, concat_axis, post=None,
-                          chunk_axis=chunk_axis)
+                          chunk_axis=chunk_axis, valid_extent=valid_extent)
 
     def stage(self, x, axis_name, split_axis, concat_axis, post=None,
-              chunk_axis=None):
+              chunk_axis=None, valid_extent=None):
+        x = self._prepare(x, axis_name, split_axis, valid_extent)
         y = self._switch(x, axis_name, split_axis, concat_axis,
                          chunk_axis=chunk_axis)
         return post(y) if post is not None else y
@@ -243,7 +264,8 @@ class OverlapStrategy(CommStrategy):
             x, axis_name, split_axis, concat_axis, chunk_axis=chunk_axis)
 
     def stage(self, x, axis_name, split_axis, concat_axis, post=None,
-              chunk_axis=None):
+              chunk_axis=None, valid_extent=None):
+        x = self._prepare(x, axis_name, split_axis, valid_extent)
         if post is None or self.n_chunks <= 1:
             y = self._switch(x, axis_name, split_axis, concat_axis,
                              chunk_axis=chunk_axis)
@@ -267,16 +289,21 @@ _STRATEGY_CLASSES = {
 }
 
 
-def make_strategy(cfg: CommConfig) -> CommStrategy:
-    return _STRATEGY_CLASSES[cfg.strategy](cfg.n_chunks)
+def make_strategy(cfg: CommConfig, axis_sizes=None) -> CommStrategy:
+    return _STRATEGY_CLASSES[cfg.strategy](cfg.n_chunks,
+                                           axis_sizes=axis_sizes)
 
 
 def topology_switch(x, axis_name, split_axis: int, concat_axis: int,
-                    cfg: CommConfig, chunk_axis=None):
+                    cfg: CommConfig, chunk_axis=None, valid_extent=None,
+                    axis_sizes=None):
     """Distributed transpose: split ``split_axis`` over ``axis_name`` ranks,
-    gather ``concat_axis``.  Must run inside shard_map."""
-    return make_strategy(cfg).switch(x, axis_name, split_axis, concat_axis,
-                                     chunk_axis=chunk_axis)
+    gather ``concat_axis``.  Must run inside shard_map.  ``valid_extent``
+    (with ``axis_sizes``) crops the split axis to its live entries before
+    the exchange -- see ``CommStrategy``."""
+    return make_strategy(cfg, axis_sizes=axis_sizes).switch(
+        x, axis_name, split_axis, concat_axis, chunk_axis=chunk_axis,
+        valid_extent=valid_extent)
 
 
 # ---------------------------------------------------------------------------

@@ -41,7 +41,7 @@ import jax.numpy as jnp
 
 __all__ = ["TransformEngine", "TransformSchedule", "as_engine",
            "build_schedule", "folded_normfact", "fwd_1d", "bwd_1d",
-           "ENGINES"]
+           "materialize_doubling", "crop_doubling", "ENGINES"]
 
 ENGINES = ("xla", "pallas")
 
@@ -95,6 +95,10 @@ def fwd_1d(x, p, sched=None):
     Leading batch axes (multi-RHS) pass through untouched -- the schedule
     is what knows the grid rank, so batched arrays REQUIRE ``sched``;
     with ``sched=None`` the array rank must equal the plan's.
+
+    Valid-extent contract: the incoming axis carries ``p.valid_in`` live
+    points (``n_pts`` deferred, ``n_fft`` when the plan pre-padded the
+    Hockney doubling up front) and the outgoing axis carries ``p.n_out``.
     """
     # measured (EXPERIMENTS.md section Perf, flups cell): transforming along
     # the native axis (jnp.fft axis=d) REGRESSES bytes by 11% -- XLA
@@ -103,25 +107,36 @@ def fwd_1d(x, p, sched=None):
     from . import transforms as tr
     engine = sched.engine if sched is not None else None
     x = jnp.moveaxis(x, _batch_ndim(x, sched) + p.dim, -1)
+    if p.pre_padded:
+        # dense up-front doubling: the zero extension is already in the
+        # array, the transform is a plain full-length one
+        if p.category in ("sym", "semi"):
+            raise AssertionError("pre_padded is a DFT-direction mode")
+        y = tr._rfft(x, engine) if p.dft == "r2c" else tr._cfft(x, engine)
+        return jnp.moveaxis(y, -1, _batch_ndim(y, sched) + p.dim)
     if p.flip:
         x = x[..., ::-1]
     x = x[..., p.in_start:p.in_start + p.n_in]
-    if p.n_fft > p.n_in:
-        pad = [(0, 0)] * (x.ndim - 1) + [(0, p.n_fft - p.n_in)]
-        x = jnp.pad(x, pad)
     if p.category in ("sym", "semi"):
+        if p.n_fft > p.n_in:
+            pad = [(0, 0)] * (x.ndim - 1) + [(0, p.n_fft - p.n_in)]
+            x = jnp.pad(x, pad)
         tables = sched.fwd_tables[p.dim] if sched is not None else None
         y = tr.r2r_forward(x, p.kind, engine=engine, tables=tables)
     elif p.dft == "r2c":
-        y = tr._rfft(x, engine)
+        # pruned forward: the length-n_fft spectrum from the n_in nonzero
+        # inputs (Pallas skips the zero tail; XLA pads -- bit-identical)
+        y = tr._rfft_padded(x, p.n_fft, engine)
     else:
-        y = tr._cfft(x, engine)
+        y = tr._cfft_padded(x, p.n_fft, engine)
     return jnp.moveaxis(y, -1, _batch_ndim(y, sched) + p.dim)
 
 
 def bwd_1d(y, p, sched=None):
     """Inverse 1-D transform of direction ``p``; chunk-safe like ``fwd_1d``
-    (and like it, batched arrays require ``sched``).
+    (and like it, batched arrays require ``sched``).  Emits ``p.valid_in``
+    points: only the ``n_in`` retained outputs under deferred doubling, the
+    full ``n_fft`` reconstruction when the plan padded up front.
     """
     # NOTE: no normalization multiply here -- every direction's normfact is
     # folded into the Green's function at plan time (build_green).
@@ -131,11 +146,17 @@ def bwd_1d(y, p, sched=None):
     if p.category in ("sym", "semi"):
         tables = sched.bwd_tables[p.dim] if sched is not None else None
         x = tr.r2r_backward(y, p.kind, engine=engine, tables=tables)
+        x = x[..., :p.n_in]
+    elif p.pre_padded:
+        # dense mode keeps the doubled extent; cropped once at solve end
+        x = (tr._irfft(y, p.n_fft, engine) if p.dft == "r2c"
+             else tr._cfft(y, engine, inverse=True))
+        return jnp.moveaxis(x, -1, _batch_ndim(x, sched) + p.dim)
     elif p.dft == "r2c":
-        x = tr._irfft(y, p.n_fft, engine)
+        # pruned backward: reconstruct only the n_in retained samples
+        x = tr._irfft_crop(y, p.n_fft, p.n_in, engine)
     else:
-        x = tr._cfft(y, engine, inverse=True)
-    x = x[..., :p.n_in]
+        x = tr._icfft_crop(y, p.n_in, engine)
     # place into the user-sized axis
     left = p.in_start
     right = p.n_pts - p.in_start - p.n_in - (1 if p.per_dup else 0)
@@ -147,6 +168,31 @@ def bwd_1d(y, p, sched=None):
     if p.flip:
         x = x[..., ::-1]
     return jnp.moveaxis(x, -1, _batch_ndim(x, sched) + p.dim)
+
+
+def materialize_doubling(x, dirs):
+    """Zero-pad every ``pre_padded`` direction of a user-shaped array from
+    ``n_pts`` to ``n_fft`` (the dense up-front Hockney doubling; a no-op on
+    deferred plans).  Leading batch axes pass through."""
+    off = x.ndim - len(dirs)
+    for d, p in enumerate(dirs):
+        if p.pre_padded and x.shape[off + d] < p.n_fft:
+            pad = [(0, 0)] * x.ndim
+            pad[off + d] = (0, p.n_fft - x.shape[off + d])
+            x = jnp.pad(x, pad)
+    return x
+
+
+def crop_doubling(x, dirs):
+    """Crop every ``pre_padded`` direction back to its user extent (the
+    final slice of a dense solve; a no-op on deferred plans)."""
+    off = x.ndim - len(dirs)
+    for d, p in enumerate(dirs):
+        if p.pre_padded and x.shape[off + d] > p.n_pts:
+            sl = [slice(None)] * x.ndim
+            sl[off + d] = slice(0, p.n_pts)
+            x = x[tuple(sl)]
+    return x
 
 
 @dataclass(frozen=True)
@@ -170,6 +216,10 @@ class TransformSchedule:
     def bwd_chunk(self, x, d: int):
         """Inverse 1-D transform of logical direction ``d``; chunk-safe."""
         return bwd_1d(x, self.dirs[d], self)
+
+    # live-extent bookkeeping lives on the plan: ``self.dirs[d].valid_in``
+    # is the physical extent a topology switch ships for dim ``d`` (see
+    # Plan1D; spectral extents are the plain ``n_out`` field)
 
     def green_multiply(self, yhat, green):
         """The fused pointwise pass (Green x normalization in one multiply)."""

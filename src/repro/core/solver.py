@@ -61,6 +61,13 @@ class Plan1D:
     zero_left: bool = False   # backward writes 0 at user index 0
     zero_right: bool = False  # backward writes 0 at the last user index
     per_dup: bool = False     # node-periodic: copy u_0 into u_N
+    # Hockney-doubling execution mode of this direction (PoissonPlan
+    # ``doubling``): False = deferred/pruned (default; the transform pads
+    # n_in -> n_fft itself, so every stage before it sees only the n_in
+    # live points), True = the zero extension is materialized UP FRONT in
+    # the user array (dense textbook Hockney: transforms and topology
+    # switches all see the doubled extent).
+    pre_padded: bool = False
 
     @property
     def h(self) -> float:
@@ -69,6 +76,14 @@ class Plan1D:
     @property
     def is_unbounded_like(self) -> bool:
         return self.category in ("semi", "unb")
+
+    @property
+    def valid_in(self) -> int:
+        """Live physical extent of this axis anywhere OUTSIDE the 1-D
+        transform: what the solvers carry through topology switches before
+        the forward and after the backward transform of this direction
+        (the spectral counterpart is the plain ``n_out`` field)."""
+        return self.n_fft if self.pre_padded else self.n_pts
 
 
 def _sym_plan(dim, bc, layout, n, L) -> Plan1D:
@@ -150,12 +165,24 @@ def _semi_plan(dim, bc, layout, n, L) -> Plan1D:
                   tr.r2r_normfact(kind, n_fft), tuple(modes), zl, zr)
 
 
+DOUBLING_MODES = ("deferred", "upfront")
+
+
 @dataclass(frozen=True)
 class PoissonPlan:
     dirs: tuple            # Plan1D per logical dim (0..2)
     order: tuple           # execution order of dims (forward)
     green_kind: str
     eps_factor: float
+    # Hockney-doubling placement for the fully-unbounded directions:
+    #   "deferred" (default) -- pruned execution: the length-2n zero
+    #       extension exists only inside that direction's own 1-D transform,
+    #       so every other stage (other-direction transforms, topology
+    #       switches) sees the n live points;
+    #   "upfront"  -- dense textbook Hockney: the input field is padded to
+    #       2n in every unbounded direction before the first transform (the
+    #       bench_solve baseline; spectral storage is identical either way).
+    doubling: str = "deferred"
 
     @property
     def input_shape(self):
@@ -163,8 +190,10 @@ class PoissonPlan:
 
 
 def make_plan(shape, L, bcs, layout=DataLayout.CELL,
-              green_kind=gr.GreenKind.CHAT2, eps_factor=2.0) -> PoissonPlan:
+              green_kind=gr.GreenKind.CHAT2, eps_factor=2.0,
+              doubling: str = "deferred") -> PoissonPlan:
     """``shape`` = cells per dim; ``bcs`` = 3 (left,right) BCType pairs."""
+    assert doubling in DOUBLING_MODES, doubling
     ndim = len(shape)
     bcs = tuple(DirBC(*b) if not isinstance(b, DirBC) else b for b in bcs)
     for b in bcs:
@@ -192,7 +221,14 @@ def make_plan(shape, L, bcs, layout=DataLayout.CELL,
             plans[d] = _semi_plan(d, b, layout, shape[d], Ld)
         else:
             plans[d] = _sym_plan(d, b, layout, shape[d], Ld)
-    return PoissonPlan(tuple(plans), order, green_kind, eps_factor)
+    if doubling == "upfront":
+        import dataclasses as _dc
+        # dense Hockney applies to the fully-unbounded dirs only (semi dirs
+        # keep their r2r in_start/flip slicing, sym/per dirs never pad), so
+        # periodic-only plans are bit-identical across both modes
+        plans = [_dc.replace(p, pre_padded=True) if p.category == "unb"
+                 else p for p in plans]
+    return PoissonPlan(tuple(plans), order, green_kind, eps_factor, doubling)
 
 
 # ---------------------------------------------------------------------------
@@ -342,8 +378,9 @@ class PoissonSolver:
 
     def __init__(self, shape, L, bcs, layout=DataLayout.CELL,
                  green_kind=gr.GreenKind.CHAT2, eps_factor=2.0,
-                 engine="xla"):
-        self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor)
+                 engine="xla", doubling="deferred"):
+        self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor,
+                              doubling=doubling)
         self.engine = as_engine(engine)
         self.schedule = build_schedule(self.plan, self.engine)
         self._green = build_green(self.plan)
@@ -354,10 +391,11 @@ class PoissonSolver:
         return self.plan.input_shape
 
     def _solve_impl(self, f):
+        from .engine import crop_doubling, materialize_doubling
         plan = self.plan
         sched = self.schedule
         green = jnp.asarray(self._green).astype(f.dtype)
-        y = f
+        y = materialize_doubling(f, plan.dirs)   # no-op when deferred
         for d in plan.order:
             y = _fwd_1d(y, plan.dirs[d], sched)
         y = sched.green_multiply(y, green)
@@ -365,6 +403,7 @@ class PoissonSolver:
             y = _bwd_1d(y, plan.dirs[d], sched)
         if jnp.iscomplexobj(y):
             y = y.real
+        y = crop_doubling(y, plan.dirs)
         return y.astype(f.dtype)
 
     def solve(self, f):
@@ -409,7 +448,7 @@ def _freeze(v):
 
 def get_solver(shape, L, bcs, layout=DataLayout.CELL,
                green_kind=gr.GreenKind.CHAT2, eps_factor=2.0,
-               engine="xla", *, mesh=None, **kw):
+               engine="xla", doubling="deferred", *, mesh=None, **kw):
     """Construct-or-fetch a solver from the global plan cache.
 
     Returns a ``PoissonSolver``, or a ``DistributedPoissonSolver`` when
@@ -422,7 +461,7 @@ def get_solver(shape, L, bcs, layout=DataLayout.CELL,
     key = ("dist" if mesh is not None else "single",
            _freeze(shape), _freeze(L), _freeze(bcs), _freeze(layout),
            _freeze(green_kind), float(eps_factor),
-           as_engine(engine), _freeze(mesh), _freeze(kw))
+           as_engine(engine), str(doubling), _freeze(mesh), _freeze(kw))
     with _SOLVER_CACHE_LOCK:
         s = _SOLVER_CACHE.get(key)
         if s is not None:
@@ -434,11 +473,11 @@ def get_solver(shape, L, bcs, layout=DataLayout.CELL,
         from repro.distributed.pencil import DistributedPoissonSolver
         s = DistributedPoissonSolver(shape, L, bcs, layout, green_kind,
                                      mesh=mesh, eps_factor=eps_factor,
-                                     engine=engine, **kw)
+                                     engine=engine, doubling=doubling, **kw)
     else:
         assert not kw, f"unexpected single-process solver kwargs: {kw}"
         s = PoissonSolver(shape, L, bcs, layout, green_kind, eps_factor,
-                          engine=engine)
+                          engine=engine, doubling=doubling)
     with _SOLVER_CACHE_LOCK:
         _SOLVER_CACHE[key] = s
         _SOLVER_CACHE.move_to_end(key)

@@ -51,6 +51,15 @@ def _pow2(n: int) -> bool:
     return n >= 2 and (n & (n - 1)) == 0
 
 
+def _scan_dtype(dtype):
+    """Widest float for the O(M) prefix sums of dst1 / odd-M dct4: their
+    roundoff accumulates linearly along the axis, so run them in f64 when
+    x64 is enabled (and stay put otherwise -- requesting f64 under
+    disabled x64 would only emit a truncation warning)."""
+    import jax
+    return jnp.float64 if jax.config.jax_enable_x64 else dtype
+
+
 # ---------------------------------------------------------------------------
 # engine-aware FFT backends (jnp by default, Stockham kernel for pallas)
 # ---------------------------------------------------------------------------
@@ -80,6 +89,69 @@ def _cfft(z, engine, inverse=False):
     return (jnp.fft.ifft if inverse else jnp.fft.fft)(z, axis=-1)
 
 
+# ---------------------------------------------------------------------------
+# pruned DFT variants (Hockney doubling: length-n_fft spectra of signals
+# whose tail is identically zero / inverses of which only a head is kept)
+# ---------------------------------------------------------------------------
+
+def _zpad(x, n_fft):
+    pad = [(0, 0)] * (x.ndim - 1) + [(0, n_fft - x.shape[-1])]
+    return jnp.pad(x, pad)
+
+
+def _rfft_padded(x, n_fft, engine):
+    """Length-``n_fft`` half spectrum of ``[x, 0, ..., 0]`` from only the
+    ``x.shape[-1]`` nonzero inputs.  The Pallas engine skips the zero tail
+    inside the Stockham kernel (first stage reads half the VMEM and does no
+    dead adds); the XLA engine pads -- jnp.fft has no pruned entry point,
+    and the explicit pad keeps the result BIT-IDENTICAL to a dense plan's
+    (the pruned-vs-dense equality tests rely on this)."""
+    n_in = x.shape[-1]
+    if n_in == n_fft:
+        return _rfft(x, engine)
+    if _use_pallas(engine) and _pow2(n_fft) and n_fft == 2 * n_in:
+        from repro.kernels import ops
+        return ops.rfft_pallas(x, pad_to=n_fft, interpret=engine.interpret)
+    return _rfft(_zpad(x, n_fft), engine)
+
+
+def _cfft_padded(z, n_fft, engine):
+    """Length-``n_fft`` complex spectrum of the zero-tail-extended ``z``."""
+    n_in = z.shape[-1]
+    if n_in == n_fft:
+        return _cfft(z, engine)
+    if (_use_pallas(engine) and _pow2(n_fft) and n_fft == 2 * n_in
+            and jnp.iscomplexobj(z)):
+        from repro.kernels import ops
+        return ops.fft1d(z, pad_to=n_fft, interpret=engine.interpret)
+    return _cfft(_zpad(z, n_fft), engine)
+
+
+def _irfft_crop(y, n_fft, keep, engine):
+    """First ``keep`` samples of the length-``n_fft`` irfft.  The Pallas
+    engine reconstructs only the retained half via the parity split (two
+    half-length inverse FFTs); XLA reconstructs fully and crops."""
+    if keep >= n_fft:
+        return _irfft(y, n_fft, engine)
+    if (_use_pallas(engine) and _pow2(n_fft) and n_fft >= 4
+            and keep <= n_fft // 2):
+        from repro.kernels import ops
+        return ops.irfft_pruned(y, n_fft, keep, interpret=engine.interpret)
+    return _irfft(y, n_fft, engine)[..., :keep]
+
+
+def _icfft_crop(z, keep, engine):
+    """First ``keep`` samples of the inverse complex FFT of ``z``."""
+    n_fft = z.shape[-1]
+    if keep >= n_fft:
+        return _cfft(z, engine, inverse=True)
+    if (_use_pallas(engine) and _pow2(n_fft) and n_fft >= 4
+            and keep <= n_fft // 2):
+        from repro.kernels import ops
+        return ops.ifft_pruned(z, keep, interpret=engine.interpret)
+    return _cfft(z, engine, inverse=True)[..., :keep]
+
+
 def _post(re, im, a, b, engine, out_dtype):
     """y = a * re + b * im along the last axis (the r2r post-twiddle)."""
     if _use_pallas(engine):
@@ -104,8 +176,12 @@ def twiddle_tables(kind: TransformKind, m: int):
       pre_re/pre_im  inverse-family pre-twiddle (2M factor folded in)
       split_c/split_s  type-IV cos/sin input split
     """
-    if kind in (TransformKind.DCT1, TransformKind.DST1):
+    if kind == TransformKind.DCT1:
         return {}
+    if kind == TransformKind.DST1:
+        # NR-style auxiliary sequence for the length-(m+1) rfft formulation
+        j = np.arange(m + 1)
+        return {"aux_sin": np.sin(np.pi * j / (m + 1.0))}
     if kind == TransformKind.DCT2:
         k = np.arange(m)
         th = np.pi * k / (2.0 * m)
@@ -127,7 +203,18 @@ def twiddle_tables(kind: TransformKind, m: int):
     if kind in (TransformKind.DCT4, TransformKind.DST4):
         n = np.arange(m)
         b = np.pi * (2 * n + 1) / (4.0 * m)
-        return {"split_c": np.cos(b), "split_s": np.sin(b)}
+        t = {"split_c": np.cos(b), "split_s": np.sin(b),
+             "alt_sign": (-1.0) ** n}
+        if m % 2 == 0:
+            # half-length complex-FFT formulation (see dct4): pre-twiddle
+            # e^{-i pi (4p+1)/(4M)} on z_p = x_{2p} + i x_{M-1-2p}, post
+            # e^{-i pi q/M} on the length-M/2 spectrum
+            p = np.arange(m // 2)
+            pre = np.pi * (4 * p + 1) / (4.0 * m)
+            post = np.pi * p / m
+            t.update(q4_pre_re=np.cos(pre), q4_pre_im=-np.sin(pre),
+                     q4_post_re=np.cos(post), q4_post_im=-np.sin(post))
+        return t
     raise ValueError(kind)
 
 
@@ -178,19 +265,40 @@ def dct3(x, engine=None, tables=None):
 def dct4(x, engine=None, tables=None):
     """DCT-IV: y_k = 2 sum_n x_n cos(pi (2k+1)(2n+1) / (4M)).
 
-    Angle-addition split: with c_n = x_n cos(B_n), s_n = x_n sin(B_n) and
-    B_n = pi(2n+1)/(4M),  y_k = DCT2(c)_k - DST2(s)_{k-1}  (sine term zero
-    at k=0) -- two half-spectrum rffts, no complex intermediates.
+    Standard half-length formulation (even M, the MDCT/FFTW-style
+    algorithm): fold the input into the length-M/2 complex sequence
+    z_p = (x_{2p} + i x_{M-1-2p}) e^{-i pi (4p+1)/(4M)}; with
+    t_q = FFT_{M/2}(z)_q e^{-i pi q/M} the outputs are
+    y_{2q} = 2 Re t_q and y_{M-1-2q} = -2 Im t_q -- ONE complex FFT of
+    length M/2 where the old path ran two length-2M real extensions (a
+    DCT2 + a DST2), the BENCH_kernels laggard.
+
+    Odd M falls back to the product-to-sum identity: with
+    c_n = x_n cos(pi(2n+1)/(4M)),  y_k + y_{k-1} = 2 DCT2(c)_k (and
+    y_0 = DCT2(c)_0), i.e. one DCT-II plus an O(M) alternating prefix sum
+    y_k = (-1)^k [Y_0 + 2 sum_{j=1..k} (-1)^j Y_j].
     """
     m = x.shape[-1]
     t = _tables(TransformKind.DCT4, m, tables)
     dtype = _rdtype(x)
+    if m % 2 == 0:
+        dt = jnp.complex128 if dtype == jnp.float64 else jnp.complex64
+        a = x[..., 0::2]                      # x_{2p}
+        b = x[..., ::-1][..., 0::2]           # x_{M-1-2p}
+        pre = (jnp.asarray(t["q4_pre_re"], dtype)
+               + 1j * jnp.asarray(t["q4_pre_im"], dtype)).astype(dt)
+        post = (jnp.asarray(t["q4_post_re"], dtype)
+                + 1j * jnp.asarray(t["q4_post_im"], dtype)).astype(dt)
+        z = (a.astype(dt) + 1j * b.astype(dt)) * pre
+        tq = _cfft(z, engine) * post
+        even = (2.0 * tq.real).astype(dtype)          # y_{2q}
+        odd = (-2.0 * tq.imag[..., ::-1]).astype(dtype)   # y_{1+2r}
+        return jnp.stack([even, odd], axis=-1).reshape(x.shape)
     c = (x * jnp.asarray(t["split_c"], dtype=dtype)).astype(dtype)
-    s = (x * jnp.asarray(t["split_s"], dtype=dtype)).astype(dtype)
-    d2 = dct2(c, engine)
-    s2 = dst2(s, engine)
-    zero = jnp.zeros(x.shape[:-1] + (1,), dtype=dtype)
-    return d2 - jnp.concatenate([zero, s2[..., :-1]], axis=-1)
+    y2 = dct2(c, engine).astype(_scan_dtype(dtype))
+    sgn = jnp.asarray(t["alt_sign"], y2.dtype)
+    cs = jnp.cumsum(sgn * y2, axis=-1)
+    return (sgn * (2.0 * cs - y2[..., :1])).astype(dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -200,14 +308,32 @@ def dct4(x, engine=None, tables=None):
 def dst1(x, engine=None, tables=None):
     """DST-I: y_k = 2 sum_n x_n sin(pi (k+1)(n+1) / (M+1)).
 
-    Odd extension of length 2(M+1); the rfft of a real odd signal is purely
-    imaginary, and bins 1..M carry the DST-I coefficients (negated).
+    Standard length-N formulation (N = M+1, the Numerical-Recipes
+    auxiliary sequence): with u = [0, x] and its reversal ur = [0, rev(x)],
+    the rfft Y of  v_j = sin(pi j/N)(u_j + ur_j) + (u_j - ur_j)/2  carries
+    the even coefficients directly (y_{2k} = -2 Im Y_k) and the odd ones as
+    a prefix sum (y_{2k+1} = Re Y_0 + 2 sum_{j=1..k} Re Y_j) -- ONE rfft of
+    length M+1 instead of the old odd extension's rfft of length 2(M+1).
     """
     m = x.shape[-1]
+    t = _tables(TransformKind.DST1, m, tables)
+    dtype = _rdtype(x)
+    s = jnp.asarray(t["aux_sin"], dtype=dtype)                 # sin(pi j/N)
     zeros = jnp.zeros(x.shape[:-1] + (1,), dtype=x.dtype)
-    # odd extension, length 2(M+1): [0, x, 0, -rev(x)]
-    z = jnp.concatenate([zeros, x, zeros, -x[..., ::-1]], axis=-1)
-    return (-_rfft(z, engine).imag[..., 1:m + 1]).astype(_rdtype(x))
+    u = jnp.concatenate([zeros, x], axis=-1)                   # u_j
+    ur = jnp.concatenate([zeros, x[..., ::-1]], axis=-1)       # u_{N-j}
+    v = s * (u + ur) + 0.5 * (u - ur)
+    f = _rfft(v, engine)                                       # bins 0..N//2
+    n_odd = (m + 1) // 2                                       # y_1, y_3, ...
+    n_even = m // 2                                            # y_2, y_4, ...
+    re = f.real[..., :n_odd].astype(_scan_dtype(dtype))
+    odd = (2.0 * jnp.cumsum(re, axis=-1) - re[..., :1]).astype(dtype)
+    even = (-2.0 * f.imag[..., 1:n_even + 1]).astype(dtype)
+    if n_even < n_odd:                                         # odd M
+        even = jnp.concatenate(
+            [even, jnp.zeros(x.shape[:-1] + (1,), dtype=dtype)], axis=-1)
+    out = jnp.stack([odd, even], axis=-1).reshape(x.shape[:-1] + (2 * n_odd,))
+    return out[..., :m]
 
 
 def dst2(x, engine=None, tables=None):
@@ -238,18 +364,14 @@ def dst3(x, engine=None, tables=None):
 def dst4(x, engine=None, tables=None):
     """DST-IV: y_k = 2 sum_n x_n sin(pi (2k+1)(2n+1) / (4M)).
 
-    Split like dct4:  y_k = DCT2(s)_k + DST2(c)_{k-1}  (sine term zero at
-    k=0) with the same cos/sin input split.
+    Reversal identity: DST4(x)_k = (-1)^k DCT4(rev(x))_k, so the type-IV
+    sine transform rides the half-length complex-FFT dct4 for free (the
+    twiddle-table layout is shared by the two kinds).
     """
     m = x.shape[-1]
     t = _tables(TransformKind.DST4, m, tables)
-    dtype = _rdtype(x)
-    c = (x * jnp.asarray(t["split_c"], dtype=dtype)).astype(dtype)
-    s = (x * jnp.asarray(t["split_s"], dtype=dtype)).astype(dtype)
-    d2 = dct2(s, engine)
-    s2 = dst2(c, engine)
-    zero = jnp.zeros(x.shape[:-1] + (1,), dtype=dtype)
-    return d2 + jnp.concatenate([zero, s2[..., :-1]], axis=-1)
+    sgn = jnp.asarray(t["alt_sign"], dtype=_rdtype(x))
+    return sgn * dct4(x[..., ::-1], engine=engine, tables=t)
 
 
 # ---------------------------------------------------------------------------

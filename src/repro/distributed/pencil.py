@@ -14,6 +14,16 @@ wire time.  Monolithic strategies run the same continuation on the whole
 switched block, so all strategies share one code path and are numerically
 identical.
 
+Every stage is VALID-EXTENT aware (DESIGN.md #8): the split axis's live
+extent (``Plan1D.valid_in``/``n_out``) is handed to
+``CommStrategy.stage(valid_extent=...)``, which crops and re-pads to the
+equal-split multiple internally.  Under the default ``doubling="deferred"``
+the Hockney zero extension of unbounded directions exists only inside each
+direction's own 1-D transform, so the early switches ship the n-point
+physical axes; ``doubling="upfront"`` materializes the doubling in the
+input field (the dense baseline ``benchmarks/bench_solve.py`` measures
+against).
+
 ``comm="auto"`` resolves the strategy at plan time with
 ``repro.core.comm.autotune_comm`` (the flups switchsort analogue): each
 candidate (strategy, n_chunks) pair is compiled and timed for THIS plan's
@@ -83,9 +93,11 @@ class DistributedPoissonSolver:
                  comm=CommConfig(), batch_axis=None,
                  eps_factor: float = 2.0, dtype=jnp.float32,
                  lazy_green: bool = False, engine="xla",
+                 doubling: str = "deferred",
                  autotune_candidates=None, autotune_cache=None,
                  autotune_batch=None):
-        self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor)
+        self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor,
+                              doubling=doubling)
         self.engine = as_engine(engine)
         self.schedule = build_schedule(self.plan, self.engine)
         self.mesh = mesh
@@ -96,8 +108,11 @@ class DistributedPoissonSolver:
         d0, d1, d2 = e
         p1 = mesh.shape[axes[0]]
         p2 = mesh.shape[axes[1]]
+        self._axis_sizes = {axes[0]: p1, axes[1]: p2}
         dirs = self.plan.dirs
-        U = [p.n_pts for p in dirs]
+        # per-dim live physical extent OUTSIDE the dim's own transform:
+        # n_pts under deferred (pruned) doubling, n_fft when padded up front
+        U = [p.valid_in for p in dirs]
         S = [p.n_out for p in dirs]
         self._U, self._S = U, S
         self._PU1 = _pad_to(U[d1], p1)
@@ -144,7 +159,7 @@ class DistributedPoissonSolver:
         d0, d1, d2 = self.plan.order
         a1, a2 = self.axes
         U, S = self._U, self._S
-        strat = make_strategy(cfg)
+        strat = make_strategy(cfg, axis_sizes=self._axis_sizes)
         # leading batch axes (multi-RHS) shift every grid-dim index; they
         # are also the chunked strategies' preferred (free) chunk axis
         off = x.ndim - len(self.plan.dirs)
@@ -152,27 +167,27 @@ class DistributedPoissonSolver:
         e0, e1, e2 = d0 + off, d1 + off, d2 + off
 
         # forward sweep: every switch carries the next direction's transform
-        # as its post continuation (crop the gathered axis, then transform)
+        # as its post continuation (crop the gathered axis, then transform).
+        # ``valid_extent`` is the split axis's live extent (deferred-doubling
+        # pruning: the first switches ship the n-point physical axes, never
+        # a 2n Hockney extension); the strategy crops + re-pads to the
+        # equal-split multiple internally.
         x = sched.fwd_chunk(x, d0)
-        x = _pad_dim(x, e0, self._PS0)
         x = strat.stage(
-            x, a1, e0, e1, chunk_axis=ca,
+            x, a1, e0, e1, chunk_axis=ca, valid_extent=S[d0],
             post=lambda c: sched.fwd_chunk(_crop_dim(c, e1, U[d1]), d1))
-        x = _pad_dim(x, e1, self._PS1)
         x = strat.stage(
-            x, a2, e1, e2, chunk_axis=ca,
+            x, a2, e1, e2, chunk_axis=ca, valid_extent=S[d1],
             post=lambda c: sched.fwd_chunk(_crop_dim(c, e2, U[d2]), d2))
 
         x = sched.green_multiply(x, green)
 
         x = sched.bwd_chunk(x, d2)
-        x = _pad_dim(x, e2, self._PU2)
         x = strat.stage(
-            x, a2, e2, e1, chunk_axis=ca,
+            x, a2, e2, e1, chunk_axis=ca, valid_extent=U[d2],
             post=lambda c: sched.bwd_chunk(_crop_dim(c, e1, S[d1]), d1))
-        x = _pad_dim(x, e1, self._PU1)
         x = strat.stage(
-            x, a1, e1, e0, chunk_axis=ca,
+            x, a1, e1, e0, chunk_axis=ca, valid_extent=U[d1],
             post=lambda c: sched.bwd_chunk(_crop_dim(c, e0, S[d0]), d0))
         if jnp.iscomplexobj(x):
             x = x.real
@@ -225,7 +240,13 @@ class DistributedPoissonSolver:
     # -- plan-time comm autotuner (flups switchsort analogue) ----------------
 
     def autotune_key(self):
-        """Canonical, repr-stable identity of (shape, bcs, layout, mesh)."""
+        """Canonical, repr-stable identity of (shape, bcs, layout, mesh).
+
+        ``doubling`` is part of the identity: a pruned (deferred) plan and a
+        dense (up-front) plan ship different extents through every switch,
+        so a persisted winner for one must never be replayed for the other
+        (the $REPRO_COMM_CACHE staleness guard, tested in test_comm.py).
+        """
         dirs = self.plan.dirs
         return (
             tuple(p.n for p in dirs),
@@ -234,6 +255,7 @@ class DistributedPoissonSolver:
             tuple((a, int(self.mesh.shape[a])) for a in self.mesh.axis_names),
             tuple(self.axes), self.batch_axis,
             jnp.dtype(self.dtype).name, self.engine.name,
+            ("doubling", self.plan.doubling),
         )
 
     def _autotune(self, candidates, cache_path, batch=None,
@@ -296,8 +318,13 @@ class DistributedPoissonSolver:
         return ((batch,) + shp) if batch is not None else shp
 
     def _pad_input(self, f):
+        from repro.core.engine import materialize_doubling
         d0, d1, d2 = self.plan.order
         off = f.ndim - 3
+        # dense (up-front) plans materialize the Hockney zero extension in
+        # the global field before the mesh-divisibility padding; deferred
+        # plans skip this and every switch ships the n-point extents
+        f = materialize_doubling(f, self.plan.dirs)
         f = _pad_dim(f, d1 + off, self._PU1)
         f = _pad_dim(f, d2 + off, self._PU2)
         return f
@@ -324,11 +351,12 @@ class DistributedPoissonSolver:
         spec = self.input_spec(local_batch)
         f = jax.device_put(f, NamedSharding(self.mesh, spec))
         out = self.jit_for(local_batch)(f, self.green_device())
+        from repro.core.engine import crop_doubling
         d0, d1, d2 = self.plan.order
         off = out.ndim - 3
         out = _crop_dim(out, d1 + off, self._U[d1])
         out = _crop_dim(out, d2 + off, self._U[d2])
-        return out
+        return crop_doubling(out, self.plan.dirs)
 
     def lower(self, batch=None, dtype=None, *, local_batch: bool = False):
         """Lower the jitted distributed solve with ShapeDtypeStructs (dry-run).

@@ -26,12 +26,32 @@ def _stages(n):
     return k
 
 
-def _kernel(re_ref, im_ref, out_re_ref, out_im_ref, *, n, inverse):
+def _kernel(re_ref, im_ref, out_re_ref, out_im_ref, *, n, inverse,
+            n_in=None):
+    """One (batch_tile, n) FFT block.  ``n_in`` < n activates the PRUNED
+    first stage (Hockney zero tail): the refs hold only the n_in = n//2
+    nonzero inputs, and the first DIF stage -- whose upper-half operand is
+    identically zero -- degenerates to a copy + twiddle modulation (no adds,
+    half the stage-1 VMEM reads)."""
     br = re_ref.shape[0]
     xr = re_ref[...]
     xi = im_ref[...]
     sign = 2.0 * np.pi / n if inverse else -2.0 * np.pi / n
     m, l = n, 1
+    if n_in is not None and n_in < n:
+        assert n == 2 * n_in and not inverse
+        half = n // 2
+        ang = jnp.arange(half, dtype=xr.dtype) * xr.dtype.type(sign)
+        wr = jnp.cos(ang)
+        wi = jnp.sin(ang)
+        # x1 == 0: e = x0, d = x0 * w  (the skipped butterflies)
+        orr = xr * wr - xi * wi
+        oii = xr * wi + xi * wr
+        xr = jnp.concatenate([xr[..., None], orr[..., None]],
+                             axis=2).reshape(br, half, 2).reshape(br, n)
+        xi = jnp.concatenate([xi[..., None], oii[..., None]],
+                             axis=2).reshape(br, half, 2).reshape(br, n)
+        m, l = half, 2
     while m > 1:
         half = m // 2
         # view as (batch, m, l)
@@ -61,20 +81,36 @@ def _kernel(re_ref, im_ref, out_re_ref, out_im_ref, *, n, inverse):
     out_im_ref[...] = xi
 
 
-def fft_stockham(re, im, batch_block=8, inverse=False, interpret=True):
-    """re/im: (batch, N) f32 -> (re, im) of the complex FFT along axis -1."""
+def fft_stockham(re, im, batch_block=8, inverse=False, interpret=True,
+                 pad_to=None):
+    """re/im: (batch, N) f32 -> (re, im) of the complex FFT along axis -1.
+
+    ``pad_to = 2 * N`` computes the length-``pad_to`` FFT of the signal
+    zero-extended to double length (the Hockney doubling shape) WITHOUT
+    materializing the zeros: the kernel reads the (batch, N) block and
+    runs a degenerate first stage (see ``_kernel``), emitting (batch,
+    pad_to) spectra.  Forward only.
+    """
     b, n = re.shape
-    _stages(n)
+    if pad_to is None:
+        _stages(n)
+        n_out, n_in = n, None
+    else:
+        assert pad_to == 2 * n, (pad_to, n)
+        assert not inverse, "pruned zero-tail input is a forward-only shape"
+        _stages(pad_to)
+        n_out, n_in = pad_to, n
     bb = min(batch_block, b)
     grid = (pl.cdiv(b, bb),)
-    spec = pl.BlockSpec((bb, n), lambda i: (i, 0))
+    spec_in = pl.BlockSpec((bb, n), lambda i: (i, 0))
+    spec_out = pl.BlockSpec((bb, n_out), lambda i: (i, 0))
     fn = pl.pallas_call(
-        partial(_kernel, n=n, inverse=inverse),
+        partial(_kernel, n=n_out, inverse=inverse, n_in=n_in),
         grid=grid,
-        in_specs=[spec, spec],
-        out_specs=[spec, spec],
-        out_shape=[jax.ShapeDtypeStruct(re.shape, re.dtype),
-                   jax.ShapeDtypeStruct(im.shape, im.dtype)],
+        in_specs=[spec_in, spec_in],
+        out_specs=[spec_out, spec_out],
+        out_shape=[jax.ShapeDtypeStruct((b, n_out), re.dtype),
+                   jax.ShapeDtypeStruct((b, n_out), im.dtype)],
         interpret=interpret,
     )
     return fn(re, im)

@@ -89,31 +89,79 @@ def dct2_post_twiddle(fhat_half, interpret: bool = True):
                         np.sin(np.pi * k / (2.0 * m)), interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("inverse", "interpret"))
-def fft1d(x, inverse: bool = False, interpret: bool = True):
-    """Batched complex FFT via the Stockham kernel. x: (..., N) complex."""
+@partial(jax.jit, static_argnames=("inverse", "interpret", "pad_to"))
+def fft1d(x, inverse: bool = False, interpret: bool = True,
+          pad_to: int | None = None):
+    """Batched complex FFT via the Stockham kernel. x: (..., N) complex.
+
+    ``pad_to = 2N`` is the PRUNED Hockney-doubling entry point: the
+    length-2N spectrum of the zero-tail-extended signal, computed without
+    materializing the zeros (the kernel's degenerate first stage)."""
     shp = x.shape
     rows = _rows(shp)
     rdt = jnp.float64 if x.dtype == jnp.complex128 else jnp.float32
     re = x.real.reshape(rows, shp[-1]).astype(rdt)
     im = x.imag.reshape(rows, shp[-1]).astype(rdt)
-    orr, oi = fft_stockham(re, im, inverse=inverse, interpret=interpret)
-    return (orr + 1j * oi).reshape(shp).astype(_cdt(rdt))
+    orr, oi = fft_stockham(re, im, inverse=inverse, interpret=interpret,
+                           pad_to=pad_to)
+    n_out = pad_to if pad_to is not None else shp[-1]
+    return (orr + 1j * oi).reshape(shp[:-1] + (n_out,)).astype(_cdt(rdt))
 
 
-@partial(jax.jit, static_argnames=("interpret",))
-def rfft_pallas(x, interpret: bool = True):
+@partial(jax.jit, static_argnames=("interpret", "pad_to"))
+def rfft_pallas(x, interpret: bool = True, pad_to: int | None = None):
     """rfft of a real (..., N) array via the Stockham kernel: complex FFT
-    with a zero imaginary plane, cropped to the N//2+1 half spectrum."""
+    with a zero imaginary plane, cropped to the half spectrum.  ``pad_to =
+    2N`` prunes the Hockney zero tail (length-2N spectrum, N+1 bins kept,
+    no materialized padding)."""
     shp = x.shape
     n = shp[-1]
     rows = _rows(shp)
     re = x.reshape(rows, n)
     im = jnp.zeros_like(re)
-    orr, oi = fft_stockham(re, im, interpret=interpret)
-    half = n // 2 + 1
+    orr, oi = fft_stockham(re, im, interpret=interpret, pad_to=pad_to)
+    half = (pad_to if pad_to is not None else n) // 2 + 1
     out = (orr[:, :half] + 1j * oi[:, :half]).astype(_cdt(x.dtype))
     return out.reshape(shp[:-1] + (half,))
+
+
+@partial(jax.jit, static_argnames=("keep", "interpret"))
+def ifft_pruned(y, keep: int, interpret: bool = True):
+    """First ``keep`` samples of the length-2n inverse FFT of ``y`` via the
+    parity split: x_j = (ifft_n(Y_even)_j + e^{i pi j / n} ifft_n(Y_odd)_j)
+    / 2 for j < n -- two half-length Stockham inverses instead of one
+    double-length inverse plus a crop (``keep <= n`` required)."""
+    shp = y.shape
+    n2 = shp[-1]
+    n = n2 // 2
+    assert keep <= n, (keep, n2)
+    rows = _rows(shp)
+    rdt = jnp.float64 if y.dtype == jnp.complex128 else jnp.float32
+    y2 = y.reshape(rows, n2)
+    halves = []
+    for part in (y2[:, 0::2], y2[:, 1::2]):
+        orr, oi = fft_stockham(part.real.astype(rdt), part.imag.astype(rdt),
+                               inverse=True, interpret=interpret)
+        halves.append(orr + 1j * oi)
+    j = jnp.arange(n, dtype=rdt)
+    mod = jnp.exp(1j * jnp.pi * j / n).astype(_cdt(rdt))
+    out = 0.5 * (halves[0] + mod[None, :] * halves[1])
+    return out[:, :keep].reshape(shp[:-1] + (keep,)).astype(_cdt(rdt))
+
+
+@partial(jax.jit, static_argnames=("n", "keep", "interpret"))
+def irfft_pruned(y, n: int, keep: int, interpret: bool = True):
+    """First ``keep`` samples of the length-``n`` irfft of a hermitian half
+    spectrum (..., n//2+1): hermitian extension + parity-split pruned
+    inverse, real part."""
+    shp = y.shape
+    rows = _rows(shp)
+    y2 = y.reshape(rows, shp[-1])
+    tail = jnp.conj(y2[:, n - n // 2 - 1:0:-1])
+    full = jnp.concatenate([y2, tail], axis=-1)
+    out = ifft_pruned(full, keep, interpret=interpret)
+    rdt = jnp.float64 if y.dtype == jnp.complex128 else jnp.float32
+    return out.real.reshape(shp[:-1] + (keep,)).astype(rdt)
 
 
 @partial(jax.jit, static_argnames=("n", "interpret"))

@@ -191,7 +191,7 @@ def _build_poisson_cell(shape_name, mesh, comm):
         green_kind=CONFIG.green, mesh=mesh,
         axes=("data", "model"), comm=comm,
         batch_axis="pod" if multi else None, lazy_green=True,
-        engine=CONFIG.engine,
+        engine=CONFIG.engine, doubling=CONFIG.doubling,
         autotune_candidates=autotune_candidates(
             CONFIG.comm_autotune_max_chunks),
         autotune_cache=CONFIG.comm_autotune_cache or None,

@@ -14,6 +14,20 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 
+# HLO text format: ``... = f32[..] all-to-all(f32[..] %a, ...)`` or async
+# -start/-done pairs (count the start only)
+_HLO_COLLECTIVE_RE = re.compile(
+    r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(-start|-done)?\(")
+# StableHLO/MLIR text format: ``%5 = "stablehlo.all_to_all"(%4) ... :
+# (tensor<AxBxcomplex<f32>>) -> tensor<...>``
+_MLIR_COLLECTIVE_RE = re.compile(
+    r'"stablehlo\.(all_to_all|all_gather|all_reduce|reduce_scatter|'
+    r'collective_permute)"')
+_MLIR_TENSOR_RE = re.compile(
+    r"tensor<((?:[0-9]+x)*)([a-z][a-z0-9]*(?:<[a-z0-9]+>)?)>")
+_MLIR_DTYPE_BYTES = {"complex<f32>": 8, "complex<f64>": 16}
+
 
 def _shape_bytes(dtype: str, dims: str) -> int:
     n = 1
@@ -23,26 +37,13 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES.get(dtype, 4)
 
 
-def collective_stats(hlo_text: str) -> dict:
-    """Sum operand bytes of every collective op in an HLO module text.
-
-    Handles both ``x = f32[..] all-to-all(f32[..] %a, ...)`` (operand types
-    inline) and start/done pairs (async collectives are counted once, on
-    the -start op).
-    """
-    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
-    opre = re.compile(
-        r"\b(all-gather|all-reduce|reduce-scatter|all-to-all|"
-        r"collective-permute)(-start|-done)?\(")
-    for line in hlo_text.splitlines():
-        s = line.strip()
-        if "=" not in s:
-            continue
-        rhs = s.split("=", 1)[1]
-        m = opre.search(rhs)
-        if not m or m.group(2) == "-done":
-            continue                      # async pair: count the start only
-        op = m.group(1)
+def _line_collective(rhs: str):
+    """(op, operand_bytes) of the collective on one ``lhs = rhs`` line of
+    HLO or StableHLO text, or None (including async -done halves)."""
+    m = _HLO_COLLECTIVE_RE.search(rhs)
+    if m is not None:
+        if m.group(2) == "-done":
+            return None               # async pair: count the start only
         head, _, args = rhs.partition(m.group(0))
         # prefer operand types inline (single-result text format); the
         # operand list ends at the first ")"
@@ -54,6 +55,44 @@ def collective_stats(hlo_text: str) -> dict:
             # upper-bound the wire bytes)
             shapes = _SHAPE_RE.findall(head)
             nbytes = sum(_shape_bytes(d, dims) for d, dims in shapes)
+        return m.group(1), nbytes
+    m = _MLIR_COLLECTIVE_RE.search(rhs)
+    if m is not None:
+        # operand types live in the trailing ``: (operands) -> results``
+        # signature; bill the operand side
+        operand = rhs.rsplit(":", 1)[-1].split("->", 1)[0]
+        nbytes = 0
+        for dims, dt in _MLIR_TENSOR_RE.findall(operand):
+            n = 1
+            for d in dims.split("x"):
+                if d:
+                    n *= int(d)
+            nbytes += n * _MLIR_DTYPE_BYTES.get(dt, _DTYPE_BYTES.get(dt, 4))
+        return m.group(1).replace("_", "-"), nbytes
+    return None
+
+
+def _iter_collectives(hlo_text: str):
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if "=" not in s:
+            continue
+        hit = _line_collective(s.split("=", 1)[1])
+        if hit is not None:
+            yield hit
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Sum operand bytes of every collective op in an HLO module text.
+
+    Handles both ``x = f32[..] all-to-all(f32[..] %a, ...)`` (operand types
+    inline) and start/done pairs (async collectives are counted once, on
+    the -start op).
+    """
+    out = {k: {"count": 0, "bytes": 0} for k in COLLECTIVES}
+    for op, nbytes in _iter_collectives(hlo_text):
+        if op not in out:
+            continue
         out[op]["count"] += 1
         out[op]["bytes"] += nbytes
     out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
@@ -61,6 +100,32 @@ def collective_stats(hlo_text: str) -> dict:
     out["total_count"] = sum(v["count"] for k, v in out.items()
                              if isinstance(v, dict))
     return out
+
+
+def comm_bytes_stats(hlo_text: str) -> dict:
+    """Per-collective operand bytes in PROGRAM ORDER (lowered StableHLO or
+    HLO text, pre-scheduling, so line order == trace order).
+
+    The valid-extent / deferred-doubling acceptance probe: a pruned plan's
+    first forward topology switch must ship fewer bytes than the dense
+    (up-front Hockney doubling) plan's, which this makes assertable as
+    ``comm_bytes_stats(pruned)["per_collective"][0]["bytes"] <
+    comm_bytes_stats(dense)["per_collective"][0]["bytes"]``.
+
+    Returns ``per_collective`` (list of ``{op, bytes}`` dicts in program
+    order), ``first_bytes``/``last_bytes`` (conveniences for the first and
+    last entries, 0 when none), and ``total_bytes``.  Chunked strategies
+    emit one entry per chunk; group consecutive entries of one switch by
+    comparing against ``CommConfig.n_chunks`` if needed.
+    """
+    per = [{"op": op, "bytes": nbytes}
+           for op, nbytes in _iter_collectives(hlo_text)]
+    return {
+        "per_collective": per,
+        "first_bytes": per[0]["bytes"] if per else 0,
+        "last_bytes": per[-1]["bytes"] if per else 0,
+        "total_bytes": sum(p["bytes"] for p in per),
+    }
 
 
 _FFTLEN_RE = re.compile(r"fft_length=\{([0-9,]+)\}")

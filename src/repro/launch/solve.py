@@ -30,6 +30,11 @@ def main(argv=None):
     ap.add_argument("--green", default="chat2")
     ap.add_argument("--engine", default="xla", choices=["xla", "pallas"],
                     help="transform engine: pure XLA or the Pallas kernels")
+    ap.add_argument("--doubling", default="deferred",
+                    choices=["deferred", "upfront"],
+                    help="Hockney doubling: deferred (pruned transforms + "
+                         "valid-extent switches, default) or upfront (dense "
+                         "textbook baseline -- the bench_solve comparison)")
     ap.add_argument("--batch", type=int, default=1,
                     help="right-hand sides per solve (batched multi-RHS "
                          "pipeline when > 1)")
@@ -68,7 +73,7 @@ def main(argv=None):
     solver = get_solver(
         (args.n,) * 3, 1.0, bcs, layout=layout, green_kind=args.green,
         mesh=mesh, comm=comm, dtype=jnp.float64,
-        engine=args.engine)
+        engine=args.engine, doubling=args.doubling)
     if args.comm == "auto":
         picked = (f"{solver.comm.strategy}"
                   f"(n_chunks={solver.comm.n_chunks})")
@@ -107,7 +112,8 @@ def main(argv=None):
         # CFD-driver shape: every step re-acquires the (cached) solver
         solver = get_solver(
             (args.n,) * 3, 1.0, bcs, layout=layout, green_kind=args.green,
-            mesh=mesh, comm=comm, dtype=jnp.float64, engine=args.engine)
+            mesh=mesh, comm=comm, dtype=jnp.float64, engine=args.engine,
+            doubling=args.doubling)
         u = solver.solve(rhs)
         u.block_until_ready()
     reps = max(args.repeats, args.steps)

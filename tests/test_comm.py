@@ -162,3 +162,72 @@ def test_comm_interleave_stats_census():
     assert stats["gaps_with_compute"] == 1
     # only transforms between collectives count, not the pre/post ones
     assert stats["fft"] == 1
+
+
+# -- valid-extent stage API + doubling-aware autotune keys ------------------
+
+def test_stage_valid_extent_crops_and_repads():
+    """_prepare: crop the split axis to its live extent, re-pad to the
+    equal-split multiple of the mesh axis (no collective needed to test)."""
+    import jax.numpy as jnp
+
+    strat = make_strategy(CommConfig("a2a"), axis_sizes={"ax": 4})
+    x = jnp.ones((10, 3))
+    y = strat._prepare(x, "ax", 0, 7)       # crop 10 -> 7, pad to 8
+    assert y.shape == (8, 3)
+    np.testing.assert_array_equal(np.asarray(y[:7]), 1.0)
+    np.testing.assert_array_equal(np.asarray(y[7:]), 0.0)
+    # valid_extent=None is the dense/historical path: ship as-is
+    assert strat._prepare(x, "ax", 0, None) is x
+    # unknown axis name: crop only (caller owns divisibility)
+    strat2 = make_strategy(CommConfig("a2a"))
+    assert strat2._prepare(x, "ax", 0, 7).shape == (7, 3)
+
+
+def test_autotune_key_includes_doubling():
+    """A pruned and a dense plan of the SAME shape/mesh must never share a
+    persisted autotune winner ($REPRO_COMM_CACHE staleness guard)."""
+    import jax
+    from repro.core.bc import BCType
+    from repro.distributed.pencil import DistributedPoissonSolver
+
+    U = (BCType.UNB, BCType.UNB)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    kw = dict(mesh=mesh, lazy_green=True)
+    dp = DistributedPoissonSolver((8,) * 3, 1.0, (U, U, U), **kw)
+    dd = DistributedPoissonSolver((8,) * 3, 1.0, (U, U, U),
+                                  doubling="upfront", **kw)
+    assert dp.autotune_key() != dd.autotune_key()
+    assert ("doubling", "deferred") in dp.autotune_key()
+    assert ("doubling", "upfront") in dd.autotune_key()
+
+
+def test_autotune_cache_not_replayed_across_doubling_modes(tmp_path):
+    """End-to-end staleness guard: a JSON cache winner recorded for the
+    dense plan must NOT short-circuit the pruned plan's sweep."""
+    import jax
+    import jax.numpy as jnp
+    from repro.core.bc import BCType
+    from repro.distributed.pencil import DistributedPoissonSolver
+
+    clear_autotune_cache()
+    path = str(tmp_path / "comm_cache.json")
+    U = (BCType.UNB, BCType.UNB)
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    cands = (CommConfig("a2a", 1),)
+    kw = dict(mesh=mesh, comm="auto", dtype=jnp.float64,
+              autotune_candidates=cands, autotune_cache=path)
+    dd = DistributedPoissonSolver((8,) * 3, 1.0, (U, U, U),
+                                  doubling="upfront", **kw)
+    assert dd.autotune_results, "dense construction must sweep live"
+    dp = DistributedPoissonSolver((8,) * 3, 1.0, (U, U, U),
+                                  doubling="deferred", **kw)
+    assert dp.autotune_results, (
+        "pruned plan replayed the dense plan's cached winner")
+    # both entries coexist under distinct keys in the persisted JSON
+    import json
+    with open(path) as fh:
+        data = json.load(fh)
+    assert len(data) == 2, list(data)
+    assert sum("'doubling', 'upfront'" in k for k in data) == 1
+    assert sum("'doubling', 'deferred'" in k for k in data) == 1
