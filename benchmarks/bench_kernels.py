@@ -25,7 +25,8 @@ import numpy as np
 import jax.numpy as jnp
 
 from repro.kernels import ops, ref
-from repro.kernels.fft_stockham import fft_stockham
+from repro.kernels.fft_stockham import (fft_stockham, fft_stockham_twiddle,
+                                        stage_count)
 
 
 def _bytes_est(m: int, rows: int, path: str) -> int:
@@ -103,6 +104,39 @@ def run(quick=True):
     rows.append(("kern_fft_stockham", t_kernel * 1e6,
                  f"ref_us={t_ref*1e6:.0f};maxerr={err:.1e}", True))
 
+    # radix-4 vs radix-2 stage pipelines (same kernel, max_radix knob):
+    # the butterfly pass count halves on pow2 lengths; interpret-mode
+    # timings recorded for trajectory only
+    r4 = {}
+    for nn in (256, 1024, 4096):
+        rr = jnp.asarray(rng.standard_normal((b, nn)), jnp.float32)
+        ii = jnp.asarray(rng.standard_normal((b, nn)), jnp.float32)
+        t2 = time_fn(lambda a, c: fft_stockham(a, c, max_radix=2), rr, ii)
+        t4 = time_fn(lambda a, c: fft_stockham(a, c, max_radix=4), rr, ii)
+        g2 = fft_stockham(rr, ii, max_radix=2)
+        g4 = fft_stockham(rr, ii, max_radix=4)
+        err = float(max(jnp.max(jnp.abs(g2[0] - g4[0])),
+                        jnp.max(jnp.abs(g2[1] - g4[1]))))
+        r4[str(nn)] = {
+            "radix2_us": t2 * 1e6, "radix4_us": t4 * 1e6,
+            "stages_radix2": stage_count(nn, 2),
+            "stages_radix4": stage_count(nn, 4),
+            "maxerr_r4_vs_r2": err, "interpret": True,
+        }
+        rows.append((f"kern_fft_radix4_n{nn}", t4 * 1e6,
+                     f"radix2_us={t2*1e6:.0f};"
+                     f"stages={stage_count(nn, 4)}v{stage_count(nn, 2)};"
+                     f"maxerr={err:.1e}", True))
+
+    # fused FFT epilogue (post-twiddle in the final stage's registers):
+    # one kernel where the unfused path ran fft_stockham + twiddle_pack
+    a_tw = jnp.asarray(rng.standard_normal(n // 2 + 1), jnp.float32)
+    b_tw = jnp.asarray(rng.standard_normal(n // 2 + 1), jnp.float32)
+    t_fused = time_fn(lambda a, c: fft_stockham_twiddle(a, c, a_tw, b_tw),
+                      re, im)
+    rows.append(("kern_fft_twiddle_epilogue", t_fused * 1e6,
+                 "fused fft+twiddle_pack;one HBM round trip", True))
+
     g = jnp.asarray(rng.standard_normal((b, n)), jnp.float32)
     f = (re + 1j * im).astype(jnp.complex64)
     t_kernel = time_fn(ops.green_multiply, f, g, 0.5)
@@ -126,6 +160,7 @@ def run(quick=True):
         "kernels": {name: {"us": us, "derived": derived, "interpret": interp}
                     for name, us, derived, interp in rows
                     if name.startswith("kern")},
+        "radix4_stages": r4,
         "r2r_transform_path": dict(r2r, interpret=False),
         "normalization_folding": {
             # elementwise full-array passes after the spectral multiply:

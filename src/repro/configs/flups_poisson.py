@@ -22,6 +22,11 @@ class PoissonArchConfig:
     # transforms + valid-extent topology switches, DESIGN.md #8) or
     # "upfront" (dense textbook baseline kept for A/B runs)
     doubling: str = "deferred"
+    # data-layout policy (DESIGN.md #9): "scheduled" (plan-time layout
+    # schedule; relayouts folded into the topology-switch unpack, zero
+    # standalone transposes between stages) or "baseline" (per-direction
+    # moveaxis round trips, the A/B reference)
+    relayout: str = "scheduled"
     # topology-switch communication (DESIGN.md #2), applied whenever the
     # launcher passes the stock default strategy:
     # "a2a" | "pipelined" | "fused" | "overlap" | "auto" (plan-time tuner)

@@ -51,21 +51,35 @@ from jax import lax
 STRATEGIES = ("a2a", "pipelined", "fused", "overlap")
 
 __all__ = [
-    "STRATEGIES", "CommConfig", "CommStrategy", "as_comm", "make_strategy",
+    "STRATEGIES", "FOLDS", "CommConfig", "CommStrategy", "as_comm",
+    "make_strategy",
     "topology_switch", "pad_axis", "crop_axis",
     "autotune_comm", "autotune_candidates",
     "clear_autotune_cache", "all_reduce_mean",
 ]
 
 
+FOLDS = ("pack", "unpack")
+
+
 @dataclass(frozen=True)
 class CommConfig:
     strategy: str = "a2a"
     n_chunks: int = 2          # pipelined/overlap granularity (paper n_batch)
+    # which side of the collective the layout-scheduled relayout is folded
+    # into (DESIGN.md #9): "pack" permutes BEFORE the all-to-all (the
+    # collective then splits a contiguous major axis), "unpack" permutes
+    # each switched block AFTER it (the collective sees the transform's
+    # minor-most layout).  Which is faster is shape- and backend-dependent
+    # -- exactly the flups switchsort situation -- so ``autotune_comm``
+    # sweeps both for layout-scheduled plans.  Ignored by the baseline
+    # (moveaxis) pipelines and by ``permute=None`` call sites.
+    fold: str = "pack"
 
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
         assert self.n_chunks >= 1, self.n_chunks
+        assert self.fold in FOLDS, self.fold
 
 
 def as_comm(comm) -> CommConfig:
@@ -163,13 +177,48 @@ class CommStrategy:
     equal-split multiple XLA's all-to-all requires (``axis_sizes``, the
     {mesh axis name: size} map handed to the constructor).  ``None`` ships
     the axis as-is (the dense path, and the historical call sites).
+
+    ``permute`` (stage/switch keyword) is an axis permutation (jnp.transpose
+    spec over the FULL array rank) applied to the block as part of the
+    switch's PACK, before the crop/pad and the collective --
+    ``split_axis``/``concat_axis``/``chunk_axis`` are therefore in the
+    PERMUTED frame.  The layout-scheduled pipelines (DESIGN.md #9) fold the
+    one relayout between consecutive directions in here, arranged so the
+    collective always splits a contiguous major axis and gathers straight
+    into the next transform's minor axis -- the solve then emits ZERO
+    standalone transposes between stages.  ``None`` keeps the incoming
+    axis order (the baseline / historical call sites).
     """
 
     name: str = "?"
 
-    def __init__(self, n_chunks: int = 1, axis_sizes=None):
+    def __init__(self, n_chunks: int = 1, axis_sizes=None,
+                 fold: str = "pack"):
         self.n_chunks = max(int(n_chunks), 1)
         self.axis_sizes = dict(axis_sizes or {})
+        assert fold in FOLDS, fold
+        self.fold = fold
+
+    @staticmethod
+    def _permute(x, permute):
+        return x if permute is None else jnp.transpose(x, permute)
+
+    def _pack(self, x, split_axis, concat_axis, chunk_axis, permute):
+        """Resolve the relayout fold: returns ``(x, split, concat, chunk,
+        unpack)`` where the coordinates address the frame the collective
+        runs in and ``unpack`` is the permutation still owed AFTER it
+        (None under fold="pack", which transposes up front).  Caller
+        coordinates are always in the PERMUTED (post-relayout) frame."""
+        if permute is None:
+            return x, split_axis, concat_axis, chunk_axis, None
+        if self.fold == "pack":
+            return (self._permute(x, permute), split_axis, concat_axis,
+                    chunk_axis, None)
+        # fold="unpack": the collective runs in the incoming frame; map the
+        # permuted-frame coordinates back through the permutation
+        return (x, permute[split_axis], permute[concat_axis],
+                None if chunk_axis is None else permute[chunk_axis],
+                permute)
 
     def _prepare(self, x, axis_name, split_axis: int, valid_extent):
         """Crop ``split_axis`` to its valid extent, then zero-pad to the
@@ -197,15 +246,21 @@ class CommStrategy:
 
     # -- shared surface ----------------------------------------------------
     def switch(self, x, axis_name, split_axis, concat_axis,
-               chunk_axis=None, valid_extent=None):
+               chunk_axis=None, valid_extent=None, permute=None):
         return self.stage(x, axis_name, split_axis, concat_axis, post=None,
-                          chunk_axis=chunk_axis, valid_extent=valid_extent)
+                          chunk_axis=chunk_axis, valid_extent=valid_extent,
+                          permute=permute)
 
     def stage(self, x, axis_name, split_axis, concat_axis, post=None,
-              chunk_axis=None, valid_extent=None):
+              chunk_axis=None, valid_extent=None, permute=None):
+        # the scheduled relayout rides the switch (pack or unpack side per
+        # ``fold``): one transpose, adjacent to the collective either way
+        x, split_axis, concat_axis, chunk_axis, unpack = self._pack(
+            x, split_axis, concat_axis, chunk_axis, permute)
         x = self._prepare(x, axis_name, split_axis, valid_extent)
         y = self._switch(x, axis_name, split_axis, concat_axis,
                          chunk_axis=chunk_axis)
+        y = self._permute(y, unpack)
         return post(y) if post is not None else y
 
 
@@ -264,22 +319,30 @@ class OverlapStrategy(CommStrategy):
             x, axis_name, split_axis, concat_axis, chunk_axis=chunk_axis)
 
     def stage(self, x, axis_name, split_axis, concat_axis, post=None,
-              chunk_axis=None, valid_extent=None):
+              chunk_axis=None, valid_extent=None, permute=None):
+        x, split_axis, concat_axis, chunk_axis, unpack = self._pack(
+            x, split_axis, concat_axis, chunk_axis, permute)
         x = self._prepare(x, axis_name, split_axis, valid_extent)
         if post is None or self.n_chunks <= 1:
             y = self._switch(x, axis_name, split_axis, concat_axis,
                              chunk_axis=chunk_axis)
+            y = self._permute(y, unpack)
             return post(y) if post is not None else y
         ax = self._chunk_axis(x, split_axis, concat_axis, chunk_axis)
+        # under fold="unpack" each chunk is permuted as it lands (in the
+        # gap its successor's collective is in flight) and the concat axis
+        # rides the same permutation into the post frame
+        ax_out = ax if unpack is None else unpack.index(ax)
         chunks, ln = _split_chunks(x, ax, self.n_chunks)
         outs = []
         inflight = _a2a(chunks[0], axis_name, split_axis, concat_axis)
         for k in range(1, self.n_chunks):
             nxt = _a2a(chunks[k], axis_name, split_axis, concat_axis)
-            outs.append(post(inflight))    # overlaps chunk k's wire time
+            # overlaps chunk k's wire time
+            outs.append(post(self._permute(inflight, unpack)))
             inflight = nxt
-        outs.append(post(inflight))
-        return crop_axis(jnp.concatenate(outs, axis=ax), ax, ln)
+        outs.append(post(self._permute(inflight, unpack)))
+        return crop_axis(jnp.concatenate(outs, axis=ax_out), ax_out, ln)
 
 
 _STRATEGY_CLASSES = {
@@ -291,19 +354,21 @@ _STRATEGY_CLASSES = {
 
 def make_strategy(cfg: CommConfig, axis_sizes=None) -> CommStrategy:
     return _STRATEGY_CLASSES[cfg.strategy](cfg.n_chunks,
-                                           axis_sizes=axis_sizes)
+                                           axis_sizes=axis_sizes,
+                                           fold=cfg.fold)
 
 
 def topology_switch(x, axis_name, split_axis: int, concat_axis: int,
                     cfg: CommConfig, chunk_axis=None, valid_extent=None,
-                    axis_sizes=None):
+                    axis_sizes=None, permute=None):
     """Distributed transpose: split ``split_axis`` over ``axis_name`` ranks,
     gather ``concat_axis``.  Must run inside shard_map.  ``valid_extent``
     (with ``axis_sizes``) crops the split axis to its live entries before
-    the exchange -- see ``CommStrategy``."""
+    the exchange; ``permute`` folds a relayout into the unpack -- see
+    ``CommStrategy``."""
     return make_strategy(cfg, axis_sizes=axis_sizes).switch(
         x, axis_name, split_axis, concat_axis, chunk_axis=chunk_axis,
-        valid_extent=valid_extent)
+        valid_extent=valid_extent, permute=permute)
 
 
 # ---------------------------------------------------------------------------
@@ -314,15 +379,20 @@ _AUTOTUNE_CACHE: dict = {}
 _AUTOTUNE_LOCK = threading.Lock()
 
 
-def autotune_candidates(max_chunks: int = 4):
+def autotune_candidates(max_chunks: int = 4, folds=("pack",)):
     """Default (strategy, n_chunks) sweep: monolithic strategies once,
-    chunked strategies at 2, 4, ... up to ``max_chunks``."""
-    cands = [CommConfig("a2a", 1), CommConfig("fused", 1)]
-    nc = 2
-    while nc <= max_chunks:
-        cands.append(CommConfig("pipelined", nc))
-        cands.append(CommConfig("overlap", nc))
-        nc *= 2
+    chunked strategies at 2, 4, ... up to ``max_chunks``.  ``folds`` widens
+    the grid across relayout fold sides (layout-scheduled solvers sweep
+    ``("pack", "unpack")`` -- which side of the collective the fused
+    transpose is cheaper on is shape- and backend-dependent)."""
+    cands = []
+    for fold in folds:
+        cands += [CommConfig("a2a", 1, fold), CommConfig("fused", 1, fold)]
+        nc = 2
+        while nc <= max_chunks:
+            cands.append(CommConfig("pipelined", nc, fold))
+            cands.append(CommConfig("overlap", nc, fold))
+            nc *= 2
     return tuple(cands)
 
 
@@ -342,6 +412,7 @@ def _cache_file_load(path: str) -> dict:
 def _cache_file_store(path: str, key: str, cfg: CommConfig, timings: dict):
     data = _cache_file_load(path)
     data[key] = {"strategy": cfg.strategy, "n_chunks": cfg.n_chunks,
+                 "fold": cfg.fold,
                  "timings_us": {k: round(v * 1e6, 1)
                                 for k, v in timings.items()}}
     try:
@@ -369,8 +440,12 @@ def autotune_comm(key, time_fn, candidates=None, cache_path=None,
     if candidates is None:
         candidates = autotune_candidates()
     # the candidate grid is part of the identity: widening the sweep (e.g.
-    # raising comm_autotune_max_chunks) must invalidate the cached winner
-    labels = tuple(f"{c.strategy}:{c.n_chunks}" for c in candidates)
+    # raising comm_autotune_max_chunks or adding fold sides) must
+    # invalidate the cached winner
+    labels = tuple(
+        f"{c.strategy}:{c.n_chunks}" + ("" if c.fold == "pack"
+                                        else f":{c.fold}")
+        for c in candidates)
     key = repr((key, labels))
     if cache_path is None:
         cache_path = os.environ.get("REPRO_COMM_CACHE") or None
@@ -382,7 +457,8 @@ def autotune_comm(key, time_fn, candidates=None, cache_path=None,
         entry = _cache_file_load(cache_path).get(key)
         if entry is not None:
             try:
-                cfg = CommConfig(entry["strategy"], int(entry["n_chunks"]))
+                cfg = CommConfig(entry["strategy"], int(entry["n_chunks"]),
+                                 str(entry.get("fold", "pack")))
             except (KeyError, TypeError, ValueError, AssertionError):
                 # malformed / older-schema entry: fall through to a live
                 # sweep (the cache is best-effort, never fatal)
@@ -403,8 +479,9 @@ def autotune_comm(key, time_fn, candidates=None, cache_path=None,
     if not timings:
         return CommConfig()
     best_label = min(timings, key=timings.get)
-    strategy, nc = best_label.split(":")
-    best = CommConfig(strategy, int(nc))
+    parts = best_label.split(":")
+    best = CommConfig(parts[0], int(parts[1]),
+                      parts[2] if len(parts) > 2 else "pack")
     with _AUTOTUNE_LOCK:
         _AUTOTUNE_CACHE[key] = best
     if cache_path:

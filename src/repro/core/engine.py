@@ -25,6 +25,18 @@ to any chunk of it cut along an uninvolved axis -- the unit the ``overlap``
 comm strategy interleaves with the per-chunk collectives of a topology
 switch (see ``repro.core.comm``).
 
+Layout scheduling (DESIGN.md #9): data layout is a PLAN-TIME quantity.  A
+``LayoutSchedule`` assigns every stage the axis permutation it runs in
+(active dim minor-most); the scheduled pipelines call the ``fwd_last`` /
+``bwd_last`` stage API (no per-direction moveaxis round trips) and fold
+the one relayout per direction change into the topology switch
+(``CommStrategy.stage(permute=...)``) -- or, single-process, into one
+composed transpose.  ``fwd_last_green`` additionally fuses the Green
+multiply into the last forward direction's Pallas FFT as an in-register
+epilogue.  The ``fwd_1d``/``bwd_1d`` moveaxis adapters remain the
+natural-layout API (baseline pipelines, spectral differentiation,
+standalone callers).
+
 Batched multi-RHS execution: every op here is rank-polymorphic.  A plan
 describes ``len(plan.dirs)`` grid dimensions; any leading axes of the array
 are batch axes (``B`` independent right-hand sides sharing one plan), and a
@@ -39,9 +51,13 @@ from dataclasses import dataclass
 
 import jax.numpy as jnp
 
-__all__ = ["TransformEngine", "TransformSchedule", "as_engine",
-           "build_schedule", "folded_normfact", "fwd_1d", "bwd_1d",
-           "materialize_doubling", "crop_doubling", "ENGINES"]
+__all__ = ["TransformEngine", "TransformSchedule", "LayoutSchedule",
+           "as_engine", "build_schedule", "schedule_layouts", "relayout",
+           "on_last_axis", "folded_normfact", "fwd_1d", "bwd_1d",
+           "materialize_doubling", "crop_doubling", "ENGINES",
+           "RELAYOUT_MODES"]
+
+RELAYOUT_MODES = ("scheduled", "baseline")
 
 ENGINES = ("xla", "pallas")
 
@@ -77,7 +93,8 @@ def as_engine(engine) -> TransformEngine:
 
 
 # ---------------------------------------------------------------------------
-# per-direction 1-D ops (jnp, last-axis via moveaxis)
+# per-direction 1-D ops (jnp, last axis; natural-layout callers go through
+# the ``on_last_axis`` moveaxis adapter)
 # ---------------------------------------------------------------------------
 
 def _batch_ndim(x, sched) -> int:
@@ -89,31 +106,40 @@ def _batch_ndim(x, sched) -> int:
     return bnd
 
 
-def fwd_1d(x, p, sched=None):
-    """Forward 1-D transform of direction ``p`` (a ``Plan1D``), applied to
-    the whole block or to any chunk cut along an axis other than ``p.dim``.
-    Leading batch axes (multi-RHS) pass through untouched -- the schedule
-    is what knows the grid rank, so batched arrays REQUIRE ``sched``;
-    with ``sched=None`` the array rank must equal the plan's.
+def on_last_axis(x, axis, fn):
+    """Run ``fn`` on ``x`` with ``axis`` shuffled minor-most, restoring the
+    axis afterwards -- the mirrored moveaxis plumbing shared by ``fwd_1d``/
+    ``bwd_1d`` here and ``spectral.apply_derivative``.
+
+    Measured (EXPERIMENTS.md section Perf, flups cell): transforming along
+    the native axis (jnp.fft axis=d) REGRESSES bytes by 11% -- XLA
+    transposes internally for non-minor FFT axes and loses the fusion of
+    the explicit moveaxis (a no-op when ``axis`` is already last).  The
+    layout-SCHEDULED pipelines (DESIGN.md #9) avoid this adapter entirely:
+    they keep the active axis minor-most and fold the one real relayout
+    into the topology switch's unpack.
+    """
+    y = fn(jnp.moveaxis(x, axis, -1))
+    return jnp.moveaxis(y, -1, axis)
+
+
+def _fwd_last(x, p, sched=None):
+    """Forward 1-D transform of direction ``p`` applied to the LAST axis
+    of ``x`` (the layout-scheduled hot path: the caller guarantees the
+    active axis is minor-most).
 
     Valid-extent contract: the incoming axis carries ``p.valid_in`` live
     points (``n_pts`` deferred, ``n_fft`` when the plan pre-padded the
     Hockney doubling up front) and the outgoing axis carries ``p.n_out``.
     """
-    # measured (EXPERIMENTS.md section Perf, flups cell): transforming along
-    # the native axis (jnp.fft axis=d) REGRESSES bytes by 11% -- XLA
-    # transposes internally for non-minor FFT axes and loses the fusion of
-    # the explicit moveaxis (a no-op when d is already last). Keep moveaxis.
     from . import transforms as tr
     engine = sched.engine if sched is not None else None
-    x = jnp.moveaxis(x, _batch_ndim(x, sched) + p.dim, -1)
     if p.pre_padded:
         # dense up-front doubling: the zero extension is already in the
         # array, the transform is a plain full-length one
         if p.category in ("sym", "semi"):
             raise AssertionError("pre_padded is a DFT-direction mode")
-        y = tr._rfft(x, engine) if p.dft == "r2c" else tr._cfft(x, engine)
-        return jnp.moveaxis(y, -1, _batch_ndim(y, sched) + p.dim)
+        return tr._rfft(x, engine) if p.dft == "r2c" else tr._cfft(x, engine)
     if p.flip:
         x = x[..., ::-1]
     x = x[..., p.in_start:p.in_start + p.n_in]
@@ -122,36 +148,30 @@ def fwd_1d(x, p, sched=None):
             pad = [(0, 0)] * (x.ndim - 1) + [(0, p.n_fft - p.n_in)]
             x = jnp.pad(x, pad)
         tables = sched.fwd_tables[p.dim] if sched is not None else None
-        y = tr.r2r_forward(x, p.kind, engine=engine, tables=tables)
-    elif p.dft == "r2c":
+        return tr.r2r_forward(x, p.kind, engine=engine, tables=tables)
+    if p.dft == "r2c":
         # pruned forward: the length-n_fft spectrum from the n_in nonzero
         # inputs (Pallas skips the zero tail; XLA pads -- bit-identical)
-        y = tr._rfft_padded(x, p.n_fft, engine)
-    else:
-        y = tr._cfft_padded(x, p.n_fft, engine)
-    return jnp.moveaxis(y, -1, _batch_ndim(y, sched) + p.dim)
+        return tr._rfft_padded(x, p.n_fft, engine)
+    return tr._cfft_padded(x, p.n_fft, engine)
 
 
-def bwd_1d(y, p, sched=None):
-    """Inverse 1-D transform of direction ``p``; chunk-safe like ``fwd_1d``
-    (and like it, batched arrays require ``sched``).  Emits ``p.valid_in``
-    points: only the ``n_in`` retained outputs under deferred doubling, the
-    full ``n_fft`` reconstruction when the plan padded up front.
-    """
+def _bwd_last(y, p, sched=None):
+    """Inverse 1-D transform of direction ``p`` on the LAST axis; emits
+    ``p.valid_in`` points (the ``n_pts`` user axis under deferred doubling,
+    the full ``n_fft`` reconstruction when the plan padded up front)."""
     # NOTE: no normalization multiply here -- every direction's normfact is
     # folded into the Green's function at plan time (build_green).
     from . import transforms as tr
     engine = sched.engine if sched is not None else None
-    y = jnp.moveaxis(y, _batch_ndim(y, sched) + p.dim, -1)
     if p.category in ("sym", "semi"):
         tables = sched.bwd_tables[p.dim] if sched is not None else None
         x = tr.r2r_backward(y, p.kind, engine=engine, tables=tables)
         x = x[..., :p.n_in]
     elif p.pre_padded:
         # dense mode keeps the doubled extent; cropped once at solve end
-        x = (tr._irfft(y, p.n_fft, engine) if p.dft == "r2c"
-             else tr._cfft(y, engine, inverse=True))
-        return jnp.moveaxis(x, -1, _batch_ndim(x, sched) + p.dim)
+        return (tr._irfft(y, p.n_fft, engine) if p.dft == "r2c"
+                else tr._cfft(y, engine, inverse=True))
     elif p.dft == "r2c":
         # pruned backward: reconstruct only the n_in retained samples
         x = tr._irfft_crop(y, p.n_fft, p.n_in, engine)
@@ -167,7 +187,105 @@ def bwd_1d(y, p, sched=None):
         x = jnp.concatenate([x, x[..., :1]], axis=-1)
     if p.flip:
         x = x[..., ::-1]
-    return jnp.moveaxis(x, -1, _batch_ndim(x, sched) + p.dim)
+    return x
+
+
+def fwd_1d(x, p, sched=None):
+    """Forward 1-D transform of direction ``p`` (a ``Plan1D``), applied to
+    the whole block or to any chunk cut along an axis other than ``p.dim``,
+    in NATURAL layout (the axis is shuffled minor-most and back).  Leading
+    batch axes (multi-RHS) pass through untouched -- the schedule is what
+    knows the grid rank, so batched arrays REQUIRE ``sched``; with
+    ``sched=None`` the array rank must equal the plan's.
+    """
+    return on_last_axis(x, _batch_ndim(x, sched) + p.dim,
+                        lambda v: _fwd_last(v, p, sched))
+
+
+def bwd_1d(y, p, sched=None):
+    """Inverse 1-D transform of direction ``p`` in natural layout;
+    chunk-safe like ``fwd_1d`` (and like it, batched arrays require
+    ``sched``)."""
+    return on_last_axis(y, _batch_ndim(y, sched) + p.dim,
+                        lambda v: _bwd_last(v, p, sched))
+
+
+# ---------------------------------------------------------------------------
+# layout scheduling (DESIGN.md #9): data layout as a plan-time quantity
+# ---------------------------------------------------------------------------
+
+def to_last(perm, d):
+    """The permutation ``perm`` with logical dim ``d`` shuffled minor-most
+    and every other dim left in place (one transpose away from ``perm``)."""
+    return tuple(x for x in perm if x != d) + (d,)
+
+
+def switch_layout(perm, a, b):
+    """Layout after the topology switch retiring active dim ``a`` for
+    ``b``: ``a`` goes MAJOR-most (the axis the switch splits, so every
+    rank's share is one contiguous slab) and ``b`` MINOR-most (the
+    gathered axis, exactly where the next 1-D transform consumes it).
+    One transpose away from any ``(.., .., a)`` stage layout."""
+    rest = [d for d in perm if d not in (a, b)]
+    return (a, *rest, b)
+
+
+@dataclass(frozen=True)
+class LayoutSchedule:
+    """Plan-time axis-permutation schedule of one solve.
+
+    ``fwd[i]`` / ``bwd[i]`` is the grid-axis permutation the block is in
+    DURING forward/backward stage ``i`` (executed in pipeline order):
+    ``perm[a]`` is the logical dim stored at array axis ``a`` (batch axes
+    lead and are never permuted).  Every stage keeps its active dim
+    minor-most, so the 1-D transforms never move data; every switch
+    target is a ``switch_layout`` (outgoing dim major, incoming dim
+    minor), so the one relayout between consecutive stages is a single
+    composed transpose folded into the switch's PACK -- after it, the
+    collective splits a contiguous major axis and gathers straight into
+    the next transform's minor axis, and the pipeline emits zero
+    standalone transposes between stages (``hlo_stats.transpose_stats``).
+    ``bwd[0] == spectral``: the first backward stage reuses the spectral
+    layout, so the Green multiply and both last-direction transforms
+    share it.
+    """
+
+    fwd: tuple
+    bwd: tuple
+
+    @property
+    def spectral(self):
+        """Layout of the pointwise Green multiply (== ``fwd[-1]``)."""
+        return self.fwd[-1]
+
+
+def schedule_layouts(order, ndim: int = 3) -> LayoutSchedule:
+    """The minimal-relayout schedule: stage 0 moves only the first active
+    dim minor-most; every later stage is the ``switch_layout`` of the
+    direction pair it sits between (one fused transpose per switch)."""
+    perm = to_last(tuple(range(ndim)), order[0])
+    fwd = [perm]
+    for a, b in zip(order, order[1:]):
+        perm = switch_layout(perm, a, b)
+        fwd.append(perm)
+    bwd = [perm]                      # spectral layout reused by bwd[0]
+    rev = tuple(reversed(order))
+    for a, b in zip(rev, rev[1:]):
+        perm = switch_layout(perm, a, b)
+        bwd.append(perm)
+    return LayoutSchedule(tuple(fwd), tuple(bwd))
+
+
+def relayout(x, src, dst):
+    """One composed transpose taking the grid layout ``src`` to ``dst``
+    (identity-free: returns ``x`` unchanged when the layouts agree).
+    Leading batch axes pass through untouched."""
+    src, dst = tuple(src), tuple(dst)
+    if src == dst:
+        return x
+    off = x.ndim - len(src)
+    axes = tuple(range(off)) + tuple(off + src.index(d) for d in dst)
+    return jnp.transpose(x, axes)
 
 
 def materialize_doubling(x, dirs):
@@ -197,25 +315,39 @@ def crop_doubling(x, dirs):
 
 @dataclass(frozen=True)
 class TransformSchedule:
-    """Plan-time constants for one solve: per-direction twiddle tables and
-    the folded normalization (quadrature h weights stay in build_green)."""
+    """Plan-time constants for one solve: per-direction twiddle tables, the
+    folded normalization (quadrature h weights stay in build_green) and the
+    layout schedule of the scheduled pipelines."""
 
     engine: TransformEngine
     fwd_tables: tuple    # per logical dim: twiddle dict for the forward kind
     bwd_tables: tuple    # per logical dim: twiddle dict for the inverse kind
     norm: float          # prod of r2r normfacts, folded into the Green
     dirs: tuple = ()     # per logical dim: the plan's Plan1D
+    order: tuple = ()    # the plan's forward execution order
+    layouts: LayoutSchedule = None   # per-stage axis permutations
 
     # -- fused transform+switch stage API (chunk-safe by construction) -----
 
     def fwd_chunk(self, x, d: int):
         """Forward 1-D transform of logical direction ``d`` on a full block
-        or an uninvolved-axis chunk (the overlap strategy's stage unit)."""
+        or an uninvolved-axis chunk (the overlap strategy's stage unit), in
+        NATURAL layout (moveaxis round trip -- the baseline pipelines)."""
         return fwd_1d(x, self.dirs[d], self)
 
     def bwd_chunk(self, x, d: int):
         """Inverse 1-D transform of logical direction ``d``; chunk-safe."""
         return bwd_1d(x, self.dirs[d], self)
+
+    def fwd_last(self, x, d: int):
+        """Forward 1-D transform of direction ``d`` on the LAST axis (the
+        layout-scheduled stage unit: the pipeline guarantees the active
+        axis is already minor-most, so no data moves here)."""
+        return _fwd_last(x, self.dirs[d], self)
+
+    def bwd_last(self, x, d: int):
+        """Inverse 1-D transform of direction ``d`` on the LAST axis."""
+        return _bwd_last(x, self.dirs[d], self)
 
     # live-extent bookkeeping lives on the plan: ``self.dirs[d].valid_in``
     # is the physical extent a topology switch ships for dim ``d`` (see
@@ -230,6 +362,42 @@ class TransformSchedule:
         if jnp.iscomplexobj(yhat):
             return yhat * green
         return yhat * green.astype(yhat.dtype)
+
+    def can_fuse_green(self, d: int) -> bool:
+        """True when the forward transform of ``d`` can run the Green
+        multiply as a Pallas FFT epilogue: a power-of-two DFT direction
+        whose live extent is either the full FFT length or its pruned half
+        (the Hockney zero-tail first stage composes with the epilogue)."""
+        p = self.dirs[d]
+        n = p.n_fft
+        return (self.engine.use_pallas
+                and p.category in ("per", "unb")
+                and n >= 2 and (n & (n - 1)) == 0
+                and not p.flip and p.in_start == 0
+                and (p.n_in == n or n == 2 * p.n_in))
+
+    def fwd_last_green(self, x, d: int, green):
+        """Forward transform of the LAST forward direction fused with the
+        Green multiply: on the Pallas engine the ``spectral_scale`` pass
+        runs in the FFT's final-stage registers (one HBM round trip for
+        transform + pointwise); anywhere else it is the plain transform
+        followed by ``green_multiply``.  ``green`` must be in the same
+        layout as ``x`` with the spectral ``d`` axis minor-most."""
+        p = self.dirs[d]
+        want_cplx = p.dft == "c2c"
+        if (not self.can_fuse_green(d)
+                or bool(jnp.iscomplexobj(x)) != want_cplx):
+            return self.green_multiply(self.fwd_last(x, d), green)
+        from repro.kernels import ops
+        n_live = p.n_fft if p.pre_padded else p.n_in
+        x = x[..., :n_live]
+        pad_to = None if n_live == p.n_fft else p.n_fft
+        assert green.shape[-1] == p.n_out, (green.shape, p.n_out)
+        if p.dft == "r2c":
+            return ops.rfft_green(x, green, interpret=self.engine.interpret,
+                                  pad_to=pad_to)
+        return ops.fft1d_green(x, green, interpret=self.engine.interpret,
+                               pad_to=pad_to)
 
 
 def folded_normfact(plan) -> float:
@@ -257,4 +425,5 @@ def build_schedule(plan, engine=None) -> TransformSchedule:
             fwd.append(tr.twiddle_tables(p.kind, p.n_fft))
             bwd.append(tr.twiddle_tables(INVERSE_KIND[p.kind], p.n_fft))
     return TransformSchedule(engine, tuple(fwd), tuple(bwd),
-                             folded_normfact(plan), plan.dirs)
+                             folded_normfact(plan), plan.dirs, plan.order,
+                             schedule_layouts(plan.order, len(plan.dirs)))

@@ -31,8 +31,9 @@ from .bc import (BCType, DataLayout, DirBC, TransformKind, r2r_kind,
                  INVERSE_KIND)
 from . import transforms as tr
 from . import green as gr
-from .engine import (as_engine, build_schedule, folded_normfact, fwd_1d,
-                     bwd_1d)
+from .engine import (RELAYOUT_MODES, as_engine, build_schedule,
+                     folded_normfact, fwd_1d, bwd_1d, relayout as _relayout,
+                     schedule_layouts)
 
 __all__ = ["Plan1D", "PoissonPlan", "PoissonSolver", "make_plan",
            "get_solver", "clear_solver_cache", "solver_cache_info",
@@ -166,6 +167,35 @@ def _semi_plan(dim, bc, layout, n, L) -> Plan1D:
 
 
 DOUBLING_MODES = ("deferred", "upfront")
+ORDER_POLICIES = ("layout", "natural")
+
+
+def _choose_order(groups, ndim: int, policy: str):
+    """Execution order of the dims, grouped by BC category (sym, then
+    semi, then DFT -- the grouping is a correctness constraint; the order
+    WITHIN each group is free).
+
+    ``policy="natural"`` keeps the historical ascending order.
+    ``policy="layout"`` (default) picks, among all grouping-consistent
+    orders, the one whose ``schedule_layouts`` needs the fewest edge
+    relayouts -- e.g. single-category plans run ``(2, 0, 1)``, which both
+    starts AND ends the layout-scheduled pipeline in the user's natural
+    layout, so the only transposes left are the ones fused into the
+    topology switches.  Ties break to the lexicographically smallest
+    order, so mixed-BC plans keep their historical order and results.
+    """
+    if policy == "natural":
+        return tuple(d for g in groups for d in g)
+    from itertools import permutations, product
+    nat = tuple(range(ndim))
+    best = None
+    for combo in product(*[tuple(permutations(g)) for g in groups]):
+        order = tuple(d for g in combo for d in g)
+        lay = schedule_layouts(order, ndim)
+        cost = int(lay.fwd[0] != nat) + int(lay.bwd[-1] != nat)
+        if best is None or (cost, order) < best:
+            best = (cost, order)
+    return best[1]
 
 
 @dataclass(frozen=True)
@@ -191,9 +221,11 @@ class PoissonPlan:
 
 def make_plan(shape, L, bcs, layout=DataLayout.CELL,
               green_kind=gr.GreenKind.CHAT2, eps_factor=2.0,
-              doubling: str = "deferred") -> PoissonPlan:
+              doubling: str = "deferred",
+              order_policy: str = "layout") -> PoissonPlan:
     """``shape`` = cells per dim; ``bcs`` = 3 (left,right) BCType pairs."""
     assert doubling in DOUBLING_MODES, doubling
+    assert order_policy in ORDER_POLICIES, order_policy
     ndim = len(shape)
     bcs = tuple(DirBC(*b) if not isinstance(b, DirBC) else b for b in bcs)
     for b in bcs:
@@ -206,9 +238,12 @@ def make_plan(shape, L, bcs, layout=DataLayout.CELL,
             semi_dims.append(d)
         else:
             sym_dims.append(d)
-    order = tuple(sym_dims + semi_dims + dft_dims)
+    order = _choose_order([g for g in (sym_dims, semi_dims, dft_dims) if g],
+                          ndim, order_policy)
     plans = [None] * ndim
-    first_dft = dft_dims[0] if dft_dims else None
+    # the real-to-complex direction is the first DFT direction the solve
+    # EXECUTES (order-dependent: everything before it is real r2r)
+    first_dft = next((d for d in order if d in dft_dims), None)
     for d, b in enumerate(bcs):
         Ld = L[d] if isinstance(L, (tuple, list)) else L
         if b.is_periodic:
@@ -378,12 +413,23 @@ class PoissonSolver:
 
     def __init__(self, shape, L, bcs, layout=DataLayout.CELL,
                  green_kind=gr.GreenKind.CHAT2, eps_factor=2.0,
-                 engine="xla", doubling="deferred"):
+                 engine="xla", doubling="deferred", relayout="scheduled",
+                 order_policy="layout"):
+        assert relayout in RELAYOUT_MODES, relayout
         self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor,
-                              doubling=doubling)
+                              doubling=doubling, order_policy=order_policy)
         self.engine = as_engine(engine)
         self.schedule = build_schedule(self.plan, self.engine)
-        self._green = build_green(self.plan)
+        self.relayout = relayout
+        # ONE Green copy, held in the layout the selected pipeline
+        # multiplies in: natural for baseline, the spectral LAYOUT (active
+        # axis of the last forward stage minor-most) for scheduled --
+        # permuted once, at plan time
+        g = build_green(self.plan)
+        if relayout == "scheduled":
+            g = np.ascontiguousarray(
+                np.transpose(g, self.schedule.layouts.spectral))
+        self._green = g
         self._solve = jax.jit(self._solve_impl)
 
     @property
@@ -391,6 +437,8 @@ class PoissonSolver:
         return self.plan.input_shape
 
     def _solve_impl(self, f):
+        if self.relayout == "scheduled":
+            return self._solve_scheduled(f)
         from .engine import crop_doubling, materialize_doubling
         plan = self.plan
         sched = self.schedule
@@ -401,6 +449,40 @@ class PoissonSolver:
         y = sched.green_multiply(y, green)
         for d in reversed(plan.order):
             y = _bwd_1d(y, plan.dirs[d], sched)
+        if jnp.iscomplexobj(y):
+            y = y.real
+        y = crop_doubling(y, plan.dirs)
+        return y.astype(f.dtype)
+
+    def _solve_scheduled(self, f):
+        """Layout-scheduled pipeline (DESIGN.md #9): one composed transpose
+        per direction change (where the baseline moveaxis round trips paid
+        two), transforms always on the minor-most axis, Green multiplied in
+        the spectral layout, and -- on the Pallas engine -- the last
+        forward FFT running the Green multiply as an in-register epilogue.
+        Bit-exact vs the baseline path on the XLA engine (transposes only
+        reorder rows; the per-row math is identical)."""
+        from .engine import crop_doubling, materialize_doubling
+        plan = self.plan
+        sched = self.schedule
+        lay = sched.layouts
+        nat = tuple(range(len(plan.dirs)))
+        green = jnp.asarray(self._green).astype(f.dtype)
+        y = materialize_doubling(f, plan.dirs)   # no-op when deferred
+        cur = nat
+        for i, d in enumerate(plan.order[:-1]):
+            y = _relayout(y, cur, lay.fwd[i])
+            cur = lay.fwd[i]
+            y = sched.fwd_last(y, d)
+        d_last = plan.order[-1]
+        y = _relayout(y, cur, lay.spectral)
+        y = sched.fwd_last_green(y, d_last, green)
+        cur = lay.spectral
+        for i, d in enumerate(reversed(plan.order)):
+            y = _relayout(y, cur, lay.bwd[i])
+            cur = lay.bwd[i]
+            y = sched.bwd_last(y, d)
+        y = _relayout(y, cur, nat)
         if jnp.iscomplexobj(y):
             y = y.real
         y = crop_doubling(y, plan.dirs)
@@ -448,7 +530,8 @@ def _freeze(v):
 
 def get_solver(shape, L, bcs, layout=DataLayout.CELL,
                green_kind=gr.GreenKind.CHAT2, eps_factor=2.0,
-               engine="xla", doubling="deferred", *, mesh=None, **kw):
+               engine="xla", doubling="deferred", relayout="scheduled",
+               order_policy="layout", *, mesh=None, **kw):
     """Construct-or-fetch a solver from the global plan cache.
 
     Returns a ``PoissonSolver``, or a ``DistributedPoissonSolver`` when
@@ -461,7 +544,8 @@ def get_solver(shape, L, bcs, layout=DataLayout.CELL,
     key = ("dist" if mesh is not None else "single",
            _freeze(shape), _freeze(L), _freeze(bcs), _freeze(layout),
            _freeze(green_kind), float(eps_factor),
-           as_engine(engine), str(doubling), _freeze(mesh), _freeze(kw))
+           as_engine(engine), str(doubling), str(relayout),
+           str(order_policy), _freeze(mesh), _freeze(kw))
     with _SOLVER_CACHE_LOCK:
         s = _SOLVER_CACHE.get(key)
         if s is not None:
@@ -473,11 +557,14 @@ def get_solver(shape, L, bcs, layout=DataLayout.CELL,
         from repro.distributed.pencil import DistributedPoissonSolver
         s = DistributedPoissonSolver(shape, L, bcs, layout, green_kind,
                                      mesh=mesh, eps_factor=eps_factor,
-                                     engine=engine, doubling=doubling, **kw)
+                                     engine=engine, doubling=doubling,
+                                     relayout=relayout,
+                                     order_policy=order_policy, **kw)
     else:
         assert not kw, f"unexpected single-process solver kwargs: {kw}"
         s = PoissonSolver(shape, L, bcs, layout, green_kind, eps_factor,
-                          engine=engine, doubling=doubling)
+                          engine=engine, doubling=doubling,
+                          relayout=relayout, order_policy=order_policy)
     with _SOLVER_CACHE_LOCK:
         _SOLVER_CACHE[key] = s
         _SOLVER_CACHE.move_to_end(key)

@@ -24,6 +24,7 @@ import numpy as np
 import jax.numpy as jnp
 
 from .bc import BCType, TransformKind
+from .engine import on_last_axis
 from .solver import Plan1D
 
 __all__ = ["fd_symbol", "swap_bc", "apply_derivative"]
@@ -90,14 +91,16 @@ def apply_derivative(yhat, p_from: Plan1D, p_to: Plan1D, fd_order: int = 0):
     # mode k sits at storage index k - koffset
     w_to = fd_symbol(np.asarray(p_to.modes), p_to.h, fd_order)
 
-    y = jnp.moveaxis(yhat, d, -1)
-    # gather the input coefficient for each output mode
-    out = jnp.zeros(y.shape[:-1] + (p_to.n_out,), dtype=y.dtype)
-    # overlapping mode range
-    mode_lo = max(p_from.koffset, p_to.koffset)
-    mode_hi = min(p_from.koffset + p_from.n_out, p_to.koffset + p_to.n_out)
-    src = slice(mode_lo - p_from.koffset, mode_hi - p_from.koffset)
-    dst = slice(mode_lo - p_to.koffset, mode_hi - p_to.koffset)
-    fac = (sign * w_to[dst]).astype(y.dtype)
-    out = out.at[..., dst].set(y[..., src] * fac)
-    return jnp.moveaxis(out, -1, d)
+    def swap_last(y):
+        # gather the input coefficient for each output mode
+        out = jnp.zeros(y.shape[:-1] + (p_to.n_out,), dtype=y.dtype)
+        # overlapping mode range
+        mode_lo = max(p_from.koffset, p_to.koffset)
+        mode_hi = min(p_from.koffset + p_from.n_out,
+                      p_to.koffset + p_to.n_out)
+        src = slice(mode_lo - p_from.koffset, mode_hi - p_from.koffset)
+        dst = slice(mode_lo - p_to.koffset, mode_hi - p_to.koffset)
+        fac = (sign * w_to[dst]).astype(y.dtype)
+        return out.at[..., dst].set(y[..., src] * fac)
+
+    return on_last_axis(yhat, d, swap_last)

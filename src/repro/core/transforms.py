@@ -22,6 +22,10 @@ Engine selection: every public transform takes ``engine=None`` (pure XLA) or
 a ``repro.core.engine.TransformEngine``; ``engine="pallas"`` routes the
 post-twiddle through the ``twiddle_pack`` Pallas kernel and power-of-two
 rfft/irfft through the ``fft_stockham`` kernel (see ``repro.kernels.ops``).
+On power-of-two lengths the forward post-twiddle kinds (dct1/dct2/dst2)
+run the FUSED ``rfft_twiddle`` kernel instead -- the twiddle executes in
+the FFT's final-stage registers, one HBM round trip instead of three
+(DESIGN.md #9).
 """
 from __future__ import annotations
 
@@ -226,13 +230,29 @@ def _tables(kind, m, tables):
 # DCT types
 # ---------------------------------------------------------------------------
 
+def _rfft_twiddle_fused(z, a, b, start, count, engine, out_dtype):
+    """Fused rfft + post-twiddle (``a*re + b*im`` over ``count`` bins from
+    ``start``) when the Pallas engine can run it as ONE kernel; None when
+    the caller must take the unfused rfft + ``_post`` path."""
+    if not (_use_pallas(engine) and _pow2(z.shape[-1])):
+        return None
+    from repro.kernels import ops
+    return ops.rfft_twiddle(z, a[:count], b[:count], start=start,
+                            interpret=engine.interpret).astype(out_dtype)
+
+
 def dct1(x, engine=None, tables=None):
     """DCT-I: y_k = x_0 + (-1)^k x_{M-1} + 2 sum_{n=1}^{M-2} x_n cos(pi k n/(M-1)).
 
     Even extension of length 2(M-1); the rfft of a real even signal is real,
     and its M half-spectrum bins are exactly the DCT-I coefficients.
     """
+    m = x.shape[-1]
     z = jnp.concatenate([x, x[..., -2:0:-1]], axis=-1)  # even ext, len 2(M-1)
+    fused = _rfft_twiddle_fused(z, np.ones(m), np.zeros(m), 0, m, engine,
+                                _rdtype(x))
+    if fused is not None:
+        return fused
     return _rfft(z, engine).real.astype(_rdtype(x))
 
 
@@ -241,6 +261,10 @@ def dct2(x, engine=None, tables=None):
     m = x.shape[-1]
     t = _tables(TransformKind.DCT2, m, tables)
     z = jnp.concatenate([x, x[..., ::-1]], axis=-1)     # even ext, len 2M
+    fused = _rfft_twiddle_fused(z, t["post_a"], t["post_b"], 0, m, engine,
+                                _rdtype(x))
+    if fused is not None:
+        return fused
     f = _rfft(z, engine)[..., :m]
     return _post(f.real, f.imag, t["post_a"], t["post_b"], engine, _rdtype(x))
 
@@ -341,6 +365,10 @@ def dst2(x, engine=None, tables=None):
     m = x.shape[-1]
     t = _tables(TransformKind.DST2, m, tables)
     z = jnp.concatenate([x, -x[..., ::-1]], axis=-1)    # odd ext, len 2M
+    fused = _rfft_twiddle_fused(z, t["post_a"], t["post_b"], 1, m, engine,
+                                _rdtype(x))
+    if fused is not None:
+        return fused
     f = _rfft(z, engine)[..., 1:m + 1]
     return _post(f.real, f.imag, t["post_a"], t["post_b"], engine, _rdtype(x))
 

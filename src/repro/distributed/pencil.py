@@ -52,8 +52,10 @@ from jax.sharding import PartitionSpec as P, NamedSharding
 from repro.core.bc import DataLayout
 from repro.core import green as gr
 from repro.core.comm import (CommConfig, as_comm, autotune_comm,
+                             autotune_candidates as _default_candidates,
                              crop_axis, make_strategy, pad_axis)
-from repro.core.engine import as_engine, build_schedule
+from repro.core.engine import (RELAYOUT_MODES, as_engine, build_schedule,
+                               relayout)
 from repro.core.solver import make_plan, build_green
 
 __all__ = ["DistributedPoissonSolver"]
@@ -77,6 +79,14 @@ class DistributedPoissonSolver:
     fields, the multi-pod configuration).
     ``comm``: a ``CommConfig``, a strategy name, or ``"auto"`` (plan-time
     autotuned; see module docstring).
+    ``relayout``: ``"scheduled"`` (default; plan-time ``LayoutSchedule``,
+    relayouts folded into the topology switches -- DESIGN.md #9) or
+    ``"baseline"`` (per-direction moveaxis round trips, the A/B
+    reference).  Bit-exact vs each other on the XLA engine.
+    ``order_policy``: ``"layout"`` (default; the execution order within
+    each BC category is chosen to minimize edge relayouts) or
+    ``"natural"`` (historical ascending order -- with
+    ``relayout="baseline"`` this reproduces the PR-4 pipeline exactly).
 
     Batched multi-RHS execution: ``solve`` also accepts ``f`` with ONE
     extra leading batch dimension carried in-block (replicated over the
@@ -93,13 +103,16 @@ class DistributedPoissonSolver:
                  comm=CommConfig(), batch_axis=None,
                  eps_factor: float = 2.0, dtype=jnp.float32,
                  lazy_green: bool = False, engine="xla",
-                 doubling: str = "deferred",
+                 doubling: str = "deferred", relayout: str = "scheduled",
+                 order_policy: str = "layout",
                  autotune_candidates=None, autotune_cache=None,
                  autotune_batch=None):
+        assert relayout in RELAYOUT_MODES, relayout
         self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor,
-                              doubling=doubling)
+                              doubling=doubling, order_policy=order_policy)
         self.engine = as_engine(engine)
         self.schedule = build_schedule(self.plan, self.engine)
+        self.relayout = relayout
         self.mesh = mesh
         self.axes = axes
         self.batch_axis = batch_axis
@@ -124,14 +137,21 @@ class DistributedPoissonSolver:
         gshape = tuple(
             self._PS0 if d == d0 else (self._PS1 if d == d1 else S[d])
             for d in range(3))
+        # layout-scheduled pipelines hold the spectral block in the layout
+        # the LAST forward stage leaves it in (active axis minor-most); the
+        # Green's function is materialized directly in that layout at plan
+        # time, so the pointwise multiply never relayouts anything
+        gperm = (self.schedule.layouts.spectral
+                 if relayout == "scheduled" else (0, 1, 2))
         if lazy_green:
             # dry-run: the kernel is an argument, never materialized
-            self._green_np = jax.ShapeDtypeStruct(gshape, gdtype)
+            self._green_np = jax.ShapeDtypeStruct(
+                tuple(gshape[d] for d in gperm), gdtype)
         else:
             g = build_green(self.plan).astype(gdtype)
             gp = np.zeros(gshape, dtype=gdtype)
             gp[tuple(slice(0, s) for s in g.shape)] = g
-            self._green_np = gp
+            self._green_np = np.ascontiguousarray(np.transpose(gp, gperm))
 
         spec_in = [None, None, None]
         spec_in[d1], spec_in[d2] = axes[0], axes[1]
@@ -140,7 +160,7 @@ class DistributedPoissonSolver:
         spec_g[d0], spec_g[d1] = axes[0], axes[1]
         # the Green's function never carries the batch axis (vmap broadcasts
         # it), so its spec is the same with or without batch parallelism
-        self.g_spec = P(*spec_g)
+        self.g_spec = P(*(spec_g[d] for d in gperm))
         self.in_spec = self.input_spec(local_batch=False)
         self._green_dev = None
 
@@ -193,6 +213,76 @@ class DistributedPoissonSolver:
             x = x.real
         return x.astype(self.dtype)
 
+    def _local_solve_scheduled(self, x, green, *, cfg: CommConfig):
+        """The layout-SCHEDULED local pipeline (DESIGN.md #9): every stage
+        keeps its active axis minor-most, so the 1-D transforms move no
+        data, and the single relayout between consecutive directions is
+        folded into the topology switch's pack (``permute=``) -- after it
+        the collective always splits the retiring dim as a contiguous
+        MAJOR axis and gathers the incoming dim straight into the
+        minor-most slot the next transform consumes.  The only standalone
+        transposes left are the two edge adapters (natural user layout in,
+        natural layout out) -- asserted on lowered HLO via
+        ``hlo_stats.transpose_stats``.  Numerically identical to
+        ``_local_solve`` (bit-exact on the XLA engine: transposes reorder
+        rows, the per-row transform and pointwise math is unchanged).
+        """
+        sched = self.schedule
+        d0, d1, d2 = self.plan.order
+        a1, a2 = self.axes
+        U, S = self._U, self._S
+        lay = sched.layouts
+        L0, L1, L2 = lay.fwd
+        B0, B1, B2 = lay.bwd                 # B0 == L2 (spectral layout)
+        strat = make_strategy(cfg, axis_sizes=self._axis_sizes)
+        off = x.ndim - len(self.plan.dirs)
+        ca = 0 if off else None
+        nat = tuple(range(len(self.plan.dirs)))
+        first, last = off, x.ndim - 1        # switch frame: split major,
+                                             # gather minor (switch_layout)
+
+        def pm(src, dst):
+            # transpose spec (full array rank) folded into the pack
+            return (tuple(range(off))
+                    + tuple(off + src.index(d) for d in dst))
+
+        x = relayout(x, nat, L0)             # edge adapter (identity when
+                                             # d0 is already minor-most)
+        x = sched.fwd_last(x, d0)
+        x = strat.stage(
+            x, a1, first, last, chunk_axis=ca,
+            valid_extent=S[d0], permute=pm(L0, L1),
+            post=lambda c: sched.fwd_last(_crop_dim(c, last, U[d1]), d1))
+        if sched.can_fuse_green(d2):
+            # Pallas: the last forward FFT runs the Green multiply in its
+            # final-stage registers -- the stage continuation only crops,
+            # the fused kernel runs on the whole switched block
+            x = strat.stage(
+                x, a2, first, last, chunk_axis=ca,
+                valid_extent=S[d1], permute=pm(L1, L2),
+                post=lambda c: _crop_dim(c, last, U[d2]))
+            x = sched.fwd_last_green(x, d2, green)
+        else:
+            x = strat.stage(
+                x, a2, first, last, chunk_axis=ca,
+                valid_extent=S[d1], permute=pm(L1, L2),
+                post=lambda c: sched.fwd_last(_crop_dim(c, last, U[d2]), d2))
+            x = sched.green_multiply(x, green)
+
+        x = sched.bwd_last(x, d2)            # spectral layout: d2 last
+        x = strat.stage(
+            x, a2, first, last, chunk_axis=ca,
+            valid_extent=U[d2], permute=pm(B0, B1),
+            post=lambda c: sched.bwd_last(_crop_dim(c, last, S[d1]), d1))
+        x = strat.stage(
+            x, a1, first, last, chunk_axis=ca,
+            valid_extent=U[d1], permute=pm(B1, B2),
+            post=lambda c: sched.bwd_last(_crop_dim(c, last, S[d0]), d0))
+        x = relayout(x, B2, nat)             # edge adapter back
+        if jnp.iscomplexobj(x):
+            x = x.real
+        return x.astype(self.dtype)
+
     # -- jit assembly --------------------------------------------------------
 
     def input_spec(self, local_batch: bool = False) -> P:
@@ -218,7 +308,9 @@ class DistributedPoissonSolver:
     def _build_jit(self, cfg: CommConfig, donate: bool,
                    local_batch: bool = False):
         """shard_map + jit of the local pipeline under one comm config."""
-        local = partial(self._local_solve, cfg=cfg)
+        body = (self._local_solve_scheduled if self.relayout == "scheduled"
+                else self._local_solve)
+        local = partial(body, cfg=cfg)
         if self.batch_axis is not None:
             local = jax.vmap(local, in_axes=(0, None))
         shard_map = getattr(jax, "shard_map", None)
@@ -256,6 +348,12 @@ class DistributedPoissonSolver:
             tuple(self.axes), self.batch_axis,
             jnp.dtype(self.dtype).name, self.engine.name,
             ("doubling", self.plan.doubling),
+            # the layout schedule changes what every candidate compiles to
+            # (relayouts folded into the switches vs standalone moveaxis,
+            # and the execution order the layouts were chosen for), so the
+            # tuner must time what will actually run
+            ("relayout", self.relayout),
+            ("order", self.plan.order),
         )
 
     def _autotune(self, candidates, cache_path, batch=None,
@@ -296,6 +394,11 @@ class DistributedPoissonSolver:
                 best = min(best, time.perf_counter() - t0)
             return best
 
+        if candidates is None and self.relayout == "scheduled":
+            # layout-scheduled plans also sweep the relayout fold side:
+            # whether the switch-fused transpose is cheaper on the pack or
+            # the unpack side of the collective is shape-dependent
+            candidates = _default_candidates(folds=("pack", "unpack"))
         self.autotune_results = {}
         key = self.autotune_key() + (("tuned_batch", batch),)
         return autotune_comm(key, time_cfg,

@@ -15,7 +15,8 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .fft_stockham import fft_stockham
+from .fft_stockham import (fft_stockham, fft_stockham_scale,
+                           fft_stockham_twiddle)
 from .spectral_scale import spectral_scale
 from .twiddle_pack import twiddle_pack
 
@@ -87,6 +88,66 @@ def dct2_post_twiddle(fhat_half, interpret: bool = True):
     return post_twiddle(fhat_half.real, fhat_half.imag,
                         np.cos(np.pi * k / (2.0 * m)),
                         np.sin(np.pi * k / (2.0 * m)), interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("start", "interpret", "pad_to"))
+def rfft_twiddle(x, a, b, start: int = 0, interpret: bool = True,
+                 pad_to: int | None = None):
+    """Fused rfft + r2r post-twiddle: ``a * Re(F)[start:start+k] +
+    b * Im(F)[start:start+k]`` of the real (..., N) array ``x`` in ONE
+    Pallas kernel (the ``twiddle_pack`` pass runs in the FFT's final-stage
+    registers -- one HBM round trip instead of three).  ``pad_to = 2N``
+    composes with the pruned Hockney zero tail."""
+    shp = x.shape
+    n = shp[-1]
+    rows = _rows(shp)
+    re = x.reshape(rows, n)
+    im = jnp.zeros_like(re)
+    av = jnp.asarray(a, dtype=x.dtype)
+    bv = jnp.asarray(b, dtype=x.dtype)
+    y = fft_stockham_twiddle(re, im, av, bv, start=start,
+                             interpret=interpret, pad_to=pad_to)
+    return y.reshape(shp[:-1] + (av.shape[-1],))
+
+
+def _fft_green(x, green2d, half: bool, interpret: bool, pad_to):
+    """Shared body of the fused forward-FFT x Green epilogues."""
+    shp = x.shape
+    n = shp[-1]
+    rows = _rows(shp)
+    if jnp.iscomplexobj(x):
+        rdt = jnp.float64 if x.dtype == jnp.complex128 else jnp.float32
+        re = x.real.reshape(rows, n).astype(rdt)
+        im = x.imag.reshape(rows, n).astype(rdt)
+    else:
+        rdt = x.dtype
+        re = x.reshape(rows, n)
+        im = jnp.zeros_like(re)
+    n_fft = pad_to if pad_to is not None else n
+    k = n_fft // 2 + 1 if half else n_fft
+    g2 = green2d.reshape(-1, k).astype(rdt)
+    orr, oi = fft_stockham_scale(re, im, g2, start=0, interpret=interpret,
+                                 pad_to=pad_to)
+    return (orr + 1j * oi).reshape(shp[:-1] + (k,)).astype(_cdt(rdt))
+
+
+@partial(jax.jit, static_argnames=("interpret", "pad_to"))
+def fft1d_green(x, green, interpret: bool = True, pad_to: int | None = None):
+    """Fused forward complex FFT x Green multiply: ``FFT(x) * green`` with
+    ``green`` real of shape (..., n_fft) broadcast over any leading batch
+    of ``x`` -- the last forward direction's ``spectral_scale`` pass runs
+    in the FFT's final-stage registers."""
+    return _fft_green(x, green, half=False, interpret=interpret,
+                      pad_to=pad_to)
+
+
+@partial(jax.jit, static_argnames=("interpret", "pad_to"))
+def rfft_green(x, green, interpret: bool = True, pad_to: int | None = None):
+    """Fused rfft x Green multiply on the half spectrum: ``rfft(x) * green``
+    with ``green`` real of shape (..., n_fft//2+1); ``pad_to = 2N`` prunes
+    the Hockney zero tail inside the same kernel."""
+    return _fft_green(x, green, half=True, interpret=interpret,
+                      pad_to=pad_to)
 
 
 @partial(jax.jit, static_argnames=("inverse", "interpret", "pad_to"))

@@ -13,6 +13,12 @@ shape (B, rows, lanes) against ONE shared (rows, lanes) Green plane -- the
 kernel grids over (B, row tiles, lane tiles) and the Green BlockSpec simply
 ignores the batch index, so the kernel streams the Green tile from VMEM B
 times instead of materializing a broadcast copy in HBM.
+
+When the last forward direction is a power-of-two DFT this pass no longer
+runs standalone: ``fft_stockham_scale`` executes the same multiply in that
+FFT's final-stage registers (DESIGN.md #9).  This kernel remains the path
+for every other plan shape and the backward-normalization-free contract's
+reference.
 """
 from __future__ import annotations
 

@@ -9,6 +9,11 @@ Fusing the two multiplies, the add and the pack keeps the pass at one HBM
 read per operand and one write -- flups' pack() + shuffle() in a single
 VMEM-resident kernel.  cos/sin are broadcast along rows (one VMEM copy per
 lane tile).
+
+On power-of-two lengths this pass no longer runs standalone in the solve:
+``fft_stockham_twiddle`` executes the same epilogue in the FFT's final-
+stage registers (DESIGN.md #9).  This kernel remains the non-pow2 path
+and the unit the fused variant is validated against.
 """
 from __future__ import annotations
 

@@ -192,8 +192,11 @@ def _build_poisson_cell(shape_name, mesh, comm):
         axes=("data", "model"), comm=comm,
         batch_axis="pod" if multi else None, lazy_green=True,
         engine=CONFIG.engine, doubling=CONFIG.doubling,
+        relayout=CONFIG.relayout,
         autotune_candidates=autotune_candidates(
-            CONFIG.comm_autotune_max_chunks),
+            CONFIG.comm_autotune_max_chunks,
+            folds=(("pack", "unpack") if CONFIG.relayout == "scheduled"
+                   else ("pack",))),
         autotune_cache=CONFIG.comm_autotune_cache or None,
         # comm="auto" must time the rank it will run: the in-block batch
         autotune_batch=CONFIG.batch if local_batch else None)

@@ -209,6 +209,126 @@ def comm_interleave_stats(text: str) -> dict:
             "gaps_with_compute": gaps, "adjacent_pairs": adjacent}
 
 
+_TRANSPOSE_RE = re.compile(r"stablehlo\.transpose|=\s+\S+\s+transpose\(")
+_COLL_ANY_RE = re.compile(
+    r"all[-_]to[-_]all|all[-_]gather|all[-_]reduce|reduce[-_]scatter|"
+    r"collective[-_]permute")
+
+
+def _tensor_bytes(line: str) -> int:
+    """Byte size of the first tensor type on an HLO/StableHLO line."""
+    m = _MLIR_TENSOR_RE.search(line)
+    if m is not None:
+        dims, dt = m.groups()
+        n = 1
+        for d in dims.split("x"):
+            if d:
+                n *= int(d)
+        return n * _MLIR_DTYPE_BYTES.get(dt, _DTYPE_BYTES.get(dt, 4))
+    m = _SHAPE_RE.search(line)
+    if m is not None:
+        return _shape_bytes(m.group(1), m.group(2))
+    return 0
+
+
+def transpose_stats(text: str) -> dict:
+    """Program-order census of relayout (transpose) ops vs transform and
+    collective ops, from lowered StableHLO or HLO text (pre-scheduling, so
+    line order == trace order).
+
+    The layout-scheduling acceptance probe (DESIGN.md #9).  Each transpose
+    is classified as
+
+    * ``edge``         -- before the first or after the last transform of
+                          the pipeline: the two adapters between the user's
+                          natural layout and the scheduled one;
+    * ``switch_fused`` -- attributable to a topology switch: no transform
+                          sits between it and an adjacent collective, and
+                          it is that collective's FIRST attributed
+                          transpose (the one relayout a switch's unpack
+                          must perform anyway);
+    * ``standalone``   -- everything else: transposes strictly between two
+                          transforms with no collective to fold into, plus
+                          any attributed to a collective beyond the
+                          1-per-collective budget (the baseline pipeline's
+                          moveaxis round trips put TWO on every switch).
+
+    The scheduled distributed solve must show ``standalone == 0``; the
+    baseline shows one per switch.  ``*_bytes`` totals estimate the HBM
+    traffic of each class (operand bytes of the transpose ops).
+
+    Census limitation: a CHUNKED ``overlap`` switch under ``fold="unpack"``
+    interleaves per-chunk unpack transposes with per-chunk transforms
+    (``... C C T F T F ...``) -- on a linear token stream the later
+    chunks' transposes are indistinguishable from standalone relayouts and
+    are (conservatively) counted as such.  Gates asserting
+    ``standalone == 0`` must therefore run the census on monolithic or
+    ``fold="pack"`` configurations (as ``bench_solve.py --check`` and
+    ``tests/test_layout.py`` do); the autotuner is still free to PICK
+    overlap+unpack at runtime.
+    """
+    per_func = [[]]
+    for line in text.splitlines():
+        s = line.strip()
+        if "func.func" in s or s.startswith("ENTRY "):
+            per_func.append([])
+            continue
+        if _COLL_ANY_RE.search(s):
+            if "-done" in s:        # async pair: count the start only
+                continue
+            per_func[-1].append(("C", 0))
+        elif _FFT_RE.search(s):
+            per_func[-1].append(("F", 0))
+        elif _TRANSPOSE_RE.search(s):
+            per_func[-1].append(("T", _tensor_bytes(s)))
+    # the entry computation: most collectives, then most transposes (the
+    # single-process pipeline has no collectives at all)
+    seq = max(per_func, key=lambda f: (sum(1 for t, _ in f if t == "C"),
+                                       sum(1 for t, _ in f if t == "T")))
+    kinds = [t for t, _ in seq]
+    f_idx = [i for i, t in enumerate(kinds) if t == "F"]
+    out = {"total": 0, "edge": 0, "switch_fused": 0, "standalone": 0,
+           "total_bytes": 0, "edge_bytes": 0, "switch_fused_bytes": 0,
+           "standalone_bytes": 0, "collectives": kinds.count("C"),
+           "transforms": len(f_idx)}
+    first_f = f_idx[0] if f_idx else len(kinds)
+    last_f = f_idx[-1] if f_idx else -1
+    budget_used: dict = {}
+
+    def _adjacent_collective(i: int):
+        """Index of a collective reachable from position ``i`` without
+        crossing a transform, or None."""
+        for j in range(i - 1, -1, -1):
+            if kinds[j] == "C":
+                return j
+            if kinds[j] == "F":
+                break
+        for j in range(i + 1, len(kinds)):
+            if kinds[j] == "C":
+                return j
+            if kinds[j] == "F":
+                break
+        return None
+
+    for i, (t, nbytes) in enumerate(seq):
+        if t != "T":
+            continue
+        out["total"] += 1
+        out["total_bytes"] += nbytes
+        if i < first_f or i > last_f:
+            cls = "edge"
+        else:
+            c = _adjacent_collective(i)
+            if c is not None and not budget_used.get(c):
+                budget_used[c] = True
+                cls = "switch_fused"
+            else:
+                cls = "standalone"
+        out[cls] += 1
+        out[cls + "_bytes"] += nbytes
+    return out
+
+
 def op_census(hlo_text: str, ops=("fusion", "custom-call", "dot",
                                   "convolution", "scatter", "transpose",
                                   "copy")) -> dict:

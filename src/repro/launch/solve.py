@@ -35,6 +35,12 @@ def main(argv=None):
                     help="Hockney doubling: deferred (pruned transforms + "
                          "valid-extent switches, default) or upfront (dense "
                          "textbook baseline -- the bench_solve comparison)")
+    ap.add_argument("--relayout", default="scheduled",
+                    choices=["scheduled", "baseline"],
+                    help="data-layout policy: scheduled (plan-time layout "
+                         "schedule, relayouts folded into the topology "
+                         "switches, default) or baseline (per-direction "
+                         "moveaxis round trips -- the A/B reference)")
     ap.add_argument("--batch", type=int, default=1,
                     help="right-hand sides per solve (batched multi-RHS "
                          "pipeline when > 1)")
@@ -73,7 +79,8 @@ def main(argv=None):
     solver = get_solver(
         (args.n,) * 3, 1.0, bcs, layout=layout, green_kind=args.green,
         mesh=mesh, comm=comm, dtype=jnp.float64,
-        engine=args.engine, doubling=args.doubling)
+        engine=args.engine, doubling=args.doubling,
+        relayout=args.relayout)
     if args.comm == "auto":
         picked = (f"{solver.comm.strategy}"
                   f"(n_chunks={solver.comm.n_chunks})")
@@ -113,7 +120,7 @@ def main(argv=None):
         solver = get_solver(
             (args.n,) * 3, 1.0, bcs, layout=layout, green_kind=args.green,
             mesh=mesh, comm=comm, dtype=jnp.float64, engine=args.engine,
-            doubling=args.doubling)
+            doubling=args.doubling, relayout=args.relayout)
         u = solver.solve(rhs)
         u.block_until_ready()
     reps = max(args.repeats, args.steps)

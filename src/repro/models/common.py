@@ -205,7 +205,6 @@ def apply_rope(x, cos, sin, rope_fraction=1.0):
     rot = cos.shape[-1] * 2
     xr, xp = x[..., :rot], x[..., rot:]
     x1, x2 = xr[..., : rot // 2], xr[..., rot // 2:]
-    c = cos[..., None, :].swapaxes(-2, -3) if False else cos
     # broadcast over the heads axis: x is (..., S, H, dh); cos is (..., S, r/2)
     c = cos[..., None, :]
     s = sin[..., None, :]
