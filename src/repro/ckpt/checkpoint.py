@@ -24,7 +24,21 @@ import shutil
 import numpy as np
 import jax
 
+from repro.runtime import faults as _faults
+
 SEP = "/"
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint failed validation on restore (manifest/array mismatch,
+    truncated or missing leaf).  Deliberately NOT an AssertionError: the
+    restart path catches it and falls back to the previous valid step."""
+
+    def __init__(self, msg: str, *, path=None, leaf=None):
+        super().__init__(msg)
+        self.path = path
+        self.leaf = leaf
+        self.transient = False
 
 
 def _flatten(tree):
@@ -43,6 +57,10 @@ def save(directory, step, tree, keep_last=3):
     manifest = {"step": int(step), "treedef": str(treedef),
                 "n_leaves": len(leaves), "leaves": []}
     for i, leaf in enumerate(leaves):
+        # torn-write injection point: a ``torn_write`` spec firing here
+        # kills the write mid-leaf, leaving a partial step_<k>.tmp that the
+        # tmp+rename protocol keeps invisible to all_steps/restore
+        _faults.fail_point(f"ckpt.leaf.{i}")
         arr = np.asarray(jax.device_get(leaf))
         np.save(os.path.join(tmp, f"arr_{i}.npy"), arr)
         manifest["leaves"].append(
@@ -57,12 +75,14 @@ def save(directory, step, tree, keep_last=3):
 
 
 def _gc(directory, keep_last):
-    steps = sorted(all_steps(directory))
+    steps = sorted(_listed_steps(directory))
     for s in steps[:-keep_last]:
         shutil.rmtree(os.path.join(directory, f"step_{s}"))
 
 
-def all_steps(directory):
+def _listed_steps(directory):
+    """Step numbers with a committed dir + manifest (no array validation --
+    gc must see damaged steps too, or it would never reclaim them)."""
     if not os.path.isdir(directory):
         return []
     out = []
@@ -74,6 +94,51 @@ def all_steps(directory):
     return sorted(out)
 
 
+def _validate_step(path):
+    """Full integrity check of one committed step dir against its manifest:
+    every leaf present, loadable, and matching the recorded shape/dtype.
+    ``np.load(mmap_mode="r")`` validates the npy header AND that the file
+    holds all its bytes (truncation raises) without reading the data."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        entries = manifest["leaves"]
+        if manifest["n_leaves"] != len(entries):
+            raise CheckpointError(
+                f"manifest inconsistent: n_leaves={manifest['n_leaves']} "
+                f"but {len(entries)} leaf entries", path=path)
+        for i, ent in enumerate(entries):
+            arr = np.load(os.path.join(path, f"arr_{i}.npy"), mmap_mode="r")
+            if tuple(arr.shape) != tuple(ent["shape"]) or \
+                    str(arr.dtype) != ent["dtype"]:
+                raise CheckpointError(
+                    f"leaf {i} is {arr.shape}/{arr.dtype} on disk but the "
+                    f"manifest records {tuple(ent['shape'])}/{ent['dtype']}",
+                    path=path, leaf=i)
+        return manifest
+    except CheckpointError:
+        raise
+    except Exception as e:   # missing/truncated file, unreadable manifest
+        raise CheckpointError(
+            f"checkpoint at {path} is damaged: {e}", path=path) from e
+
+
+def step_valid(directory, step) -> bool:
+    try:
+        _validate_step(os.path.join(directory, f"step_{step}"))
+        return True
+    except CheckpointError:
+        return False
+
+
+def all_steps(directory):
+    """Steps that would actually restore: committed AND integrity-valid.
+    A step whose arrays are truncated or missing (torn write past the
+    rename, disk rot) is skipped, so restart falls back to the previous
+    valid step."""
+    return [s for s in _listed_steps(directory) if step_valid(directory, s)]
+
+
 def latest_step(directory):
     steps = all_steps(directory)
     return steps[-1] if steps else None
@@ -81,19 +146,30 @@ def latest_step(directory):
 
 def restore(directory, step, like_tree, shardings=None):
     """Restore into the structure of ``like_tree``; optionally re-shard with
-    a matching tree of NamedSharding (elastic restore onto any mesh)."""
+    a matching tree of NamedSharding (elastic restore onto any mesh).
+
+    The manifest is validated against both the on-disk arrays and
+    ``like_tree`` (leaf count, per-leaf shape) before anything is loaded;
+    mismatches raise :class:`CheckpointError` with the offending leaf."""
     path = os.path.join(directory, f"step_{step}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    manifest = _validate_step(path)
     leaves, treedef = _flatten(like_tree)
-    assert manifest["n_leaves"] == len(leaves), "tree structure changed"
+    if manifest["n_leaves"] != len(leaves):
+        raise CheckpointError(
+            f"tree structure changed: checkpoint has "
+            f"{manifest['n_leaves']} leaves, restore target has "
+            f"{len(leaves)}", path=path)
     out = []
     shard_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(leaves))
     for i, (leaf, shd) in enumerate(zip(leaves, shard_leaves)):
+        ent = manifest["leaves"][i]
+        if tuple(ent["shape"]) != tuple(leaf.shape):
+            raise CheckpointError(
+                f"leaf {i}: checkpoint shape {tuple(ent['shape'])} != "
+                f"restore target shape {tuple(leaf.shape)}",
+                path=path, leaf=i)
         arr = np.load(os.path.join(path, f"arr_{i}.npy"))
-        assert tuple(arr.shape) == tuple(leaf.shape), \
-            (i, arr.shape, leaf.shape)
         if shd is not None:
             out.append(jax.device_put(arr, shd))
         else:

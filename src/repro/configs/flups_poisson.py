@@ -37,6 +37,15 @@ class PoissonArchConfig:
     # persists them as JSON so later processes skip the timing sweep
     comm_autotune_cache: str = ""
     comm_autotune_max_chunks: int = 4   # sweep n_chunks in {2, 4, ...}
+    # per-candidate wall-clock budget for the comm="auto" sweep, seconds
+    # (0 = unlimited, or $REPRO_COMM_BUDGET); one pathological candidate
+    # must never stall plan construction -- it is skipped and recorded in
+    # the solver's autotune census (DESIGN.md #10)
+    comm_autotune_budget_s: float = 0.0
+    # numerical health guard armed on every solve (DESIGN.md #10):
+    # "" (off) | "nan" (finiteness) | "residual" (finiteness + FD residual)
+    verify: str = ""
+    verify_rtol: float = 0.5
 
 
 U = (BCType.UNB, BCType.UNB)

@@ -48,6 +48,8 @@ from dataclasses import dataclass
 import jax.numpy as jnp
 from jax import lax
 
+from repro.runtime import faults as _faults
+
 STRATEGIES = ("a2a", "pipelined", "fused", "overlap")
 
 __all__ = [
@@ -253,6 +255,9 @@ class CommStrategy:
 
     def stage(self, x, axis_name, split_axis, concat_axis, post=None,
               chunk_axis=None, valid_extent=None, permute=None):
+        # fault-injection hook: an armed spec for this strategy simulates
+        # the collective dying at trace time (chaos suite; no-op otherwise)
+        _faults.fail_point(f"comm.{self.name}")
         # the scheduled relayout rides the switch (pack or unpack side per
         # ``fold``): one transpose, adjacent to the collective either way
         x, split_axis, concat_axis, chunk_axis, unpack = self._pack(
@@ -320,6 +325,7 @@ class OverlapStrategy(CommStrategy):
 
     def stage(self, x, axis_name, split_axis, concat_axis, post=None,
               chunk_axis=None, valid_extent=None, permute=None):
+        _faults.fail_point(f"comm.{self.name}")
         x, split_axis, concat_axis, chunk_axis, unpack = self._pack(
             x, split_axis, concat_axis, chunk_axis, permute)
         x = self._prepare(x, axis_name, split_axis, valid_extent)
@@ -404,17 +410,25 @@ def clear_autotune_cache():
 def _cache_file_load(path: str) -> dict:
     try:
         with open(path) as fh:
-            return json.load(fh)
+            data = json.load(fh)
     except (OSError, ValueError):
         return {}
+    if not isinstance(data, dict):
+        return {}
+    # chaos hook: an armed ``corrupt_cache`` spec rots the loaded entries
+    # in place; the consumer must treat them as malformed and re-sweep
+    return _faults.mangle_cache_entry(data)
 
 
-def _cache_file_store(path: str, key: str, cfg: CommConfig, timings: dict):
+def _cache_file_store(path: str, key: str, cfg: CommConfig, timings: dict,
+                      skipped=()):
     data = _cache_file_load(path)
     data[key] = {"strategy": cfg.strategy, "n_chunks": cfg.n_chunks,
                  "fold": cfg.fold,
                  "timings_us": {k: round(v * 1e6, 1)
                                 for k, v in timings.items()}}
+    if skipped:                     # budget-abandoned candidates, on record
+        data[key]["skipped_budget"] = list(skipped)
     try:
         d = os.path.dirname(path)
         if d:
@@ -425,8 +439,28 @@ def _cache_file_store(path: str, key: str, cfg: CommConfig, timings: dict):
         _warn_once(f"comm: cannot persist autotune cache to {path}: {e}")
 
 
+def _timed_call(fn, arg, budget_s):
+    """Run ``fn(arg)`` with a wall-clock budget.  Returns (value, None) or
+    (None, "timeout").  The call runs in a worker thread so a pathological
+    candidate (hung collective, runaway compile) cannot stall plan
+    construction -- on timeout the sweep moves on and the stray thread is
+    abandoned (it holds no locks the sweep needs)."""
+    if not budget_s or budget_s <= 0:
+        return fn(arg), None
+    import concurrent.futures as cf
+    ex = cf.ThreadPoolExecutor(max_workers=1)
+    fut = ex.submit(fn, arg)
+    try:
+        return fut.result(timeout=budget_s), None
+    except cf.TimeoutError:
+        fut.cancel()
+        return None, "timeout"
+    finally:
+        ex.shutdown(wait=False)
+
+
 def autotune_comm(key, time_fn, candidates=None, cache_path=None,
-                  results=None) -> CommConfig:
+                  results=None, budget_s=None, census=None) -> CommConfig:
     """Pick the fastest (strategy, n_chunks) pair for one plan/mesh key.
 
     ``time_fn(cfg) -> seconds`` lowers+times one solve under ``cfg`` (the
@@ -436,9 +470,22 @@ def autotune_comm(key, time_fn, candidates=None, cache_path=None,
     filled with the per-candidate timings of a live sweep (empty on a cache
     hit).  A candidate that raises is skipped; if every candidate fails the
     default ``a2a`` is returned.
+
+    ``budget_s`` (default $REPRO_COMM_BUDGET, unset = unlimited) is the
+    per-candidate wall-clock budget: a candidate that does not produce a
+    timing within it is skipped (warned once) so ONE pathological
+    (strategy, n_chunks, fold) pair cannot stall plan construction.
+    ``census``, when a dict, records the sweep's full account:
+    ``timed`` (label -> seconds), ``failed`` (label -> error) and
+    ``skipped_budget`` (labels abandoned on budget).
     """
     if candidates is None:
         candidates = autotune_candidates()
+    if budget_s is None:
+        try:
+            budget_s = float(os.environ.get("REPRO_COMM_BUDGET", "") or 0)
+        except ValueError:
+            budget_s = 0
     # the candidate grid is part of the identity: widening the sweep (e.g.
     # raising comm_autotune_max_chunks or adding fold sides) must
     # invalidate the cached winner
@@ -469,13 +516,25 @@ def autotune_comm(key, time_fn, candidates=None, cache_path=None,
                 return cfg
 
     timings: dict = {}
+    skipped, failed = [], {}
     for cfg, label in zip(candidates, labels):
         try:
-            timings[label] = float(time_fn(cfg))
+            t, why = _timed_call(time_fn, cfg, budget_s)
         except Exception as e:      # noqa: BLE001 -- candidate may not lower
+            failed[label] = f"{type(e).__name__}: {e}"[:200]
             _warn_once(f"comm: autotune candidate {label} failed: {e}")
+            continue
+        if why == "timeout":
+            skipped.append(label)
+            _warn_once(f"comm: autotune candidate {label} exceeded the "
+                       f"{budget_s:g}s budget; skipped")
+            continue
+        timings[label] = float(t)
     if results is not None:
         results.update(timings)
+    if census is not None:
+        census.update(timed=dict(timings), failed=failed,
+                      skipped_budget=list(skipped))
     if not timings:
         return CommConfig()
     best_label = min(timings, key=timings.get)
@@ -485,7 +544,7 @@ def autotune_comm(key, time_fn, candidates=None, cache_path=None,
     with _AUTOTUNE_LOCK:
         _AUTOTUNE_CACHE[key] = best
     if cache_path:
-        _cache_file_store(cache_path, key, best, timings)
+        _cache_file_store(cache_path, key, best, timings, skipped)
     return best
 
 

@@ -51,6 +51,8 @@ from dataclasses import dataclass
 
 import jax.numpy as jnp
 
+from repro.runtime import faults as _faults
+
 __all__ = ["TransformEngine", "TransformSchedule", "LayoutSchedule",
            "as_engine", "build_schedule", "schedule_layouts", "relayout",
            "on_last_axis", "folded_normfact", "fwd_1d", "bwd_1d",
@@ -134,6 +136,9 @@ def _fwd_last(x, p, sched=None):
     """
     from . import transforms as tr
     engine = sched.engine if sched is not None else None
+    x = _faults.taint(f"fwd.{p.dim}", x)
+    if engine is not None and engine.use_pallas:
+        _faults.fail_point(f"pallas.fwd.{p.dim}")
     if p.pre_padded:
         # dense up-front doubling: the zero extension is already in the
         # array, the transform is a plain full-length one
@@ -164,6 +169,9 @@ def _bwd_last(y, p, sched=None):
     # folded into the Green's function at plan time (build_green).
     from . import transforms as tr
     engine = sched.engine if sched is not None else None
+    y = _faults.taint(f"bwd.{p.dim}", y)
+    if engine is not None and engine.use_pallas:
+        _faults.fail_point(f"pallas.bwd.{p.dim}")
     if p.category in ("sym", "semi"):
         tables = sched.bwd_tables[p.dim] if sched is not None else None
         x = tr.r2r_backward(y, p.kind, engine=engine, tables=tables)
@@ -355,7 +363,9 @@ class TransformSchedule:
 
     def green_multiply(self, yhat, green):
         """The fused pointwise pass (Green x normalization in one multiply)."""
+        yhat = _faults.taint("green", yhat)
         if self.engine.use_pallas:
+            _faults.fail_point("pallas.green")
             from repro.kernels import ops
             return ops.green_multiply(yhat, green,
                                       interpret=self.engine.interpret)
@@ -388,6 +398,10 @@ class TransformSchedule:
         if (not self.can_fuse_green(d)
                 or bool(jnp.iscomplexobj(x)) != want_cplx):
             return self.green_multiply(self.fwd_last(x, d), green)
+        x = _faults.taint(f"fwd.{p.dim}", x)
+        x = _faults.taint("green", x)
+        _faults.fail_point(f"pallas.fwd.{p.dim}")
+        _faults.fail_point("pallas.green")
         from repro.kernels import ops
         n_live = p.n_fft if p.pre_padded else p.n_in
         x = x[..., :n_live]

@@ -37,7 +37,7 @@ from .engine import (RELAYOUT_MODES, as_engine, build_schedule,
 
 __all__ = ["Plan1D", "PoissonPlan", "PoissonSolver", "make_plan",
            "get_solver", "clear_solver_cache", "solver_cache_info",
-           "set_solver_cache_capacity"]
+           "set_solver_cache_capacity", "evict_solver_entries"]
 
 
 @dataclass(frozen=True)
@@ -399,6 +399,17 @@ _bwd_1d = bwd_1d
 # solver
 # ---------------------------------------------------------------------------
 
+def _fresh_jit(impl):
+    """``jax.jit`` over a FRESH function object.  jitting a bound method
+    directly shares jax's global trace cache across wrappers of the same
+    method, so a post-reconfigure ``jax.jit(self._solve_impl)`` can silently
+    replay a stale (or fault-tainted) trace whenever the call signature
+    coincides; a unique closure per wrapper guarantees the retrace."""
+    def call(f):
+        return impl(f)
+    return jax.jit(call)
+
+
 class PoissonSolver:
     """u = solve(f): FFT-based solution of lap(u) = f with mixed BCs.
 
@@ -409,28 +420,75 @@ class PoissonSolver:
     pipeline -- same transform count, bigger row batches).  One jit
     specialization exists per input rank/shape; the plan, schedule and
     Green's function are shared by all of them.
+
+    Resilience (DESIGN.md #10): every ``solve`` runs under the graceful-
+    degradation ladder -- on failure the solver retries transient errors
+    with bounded backoff, then steps its config down one rung at a time
+    (``pallas -> xla``, ``scheduled -> baseline``, ``deferred -> upfront``),
+    rebuilding the pipeline each rung; the trail lands in
+    ``self.stats["degradations"]`` and a terminal failure raises
+    ``repro.runtime.SolveError`` with stage provenance.  ``verify``
+    ("nan" | "residual", default off) arms the numerical health guards on
+    every solve; a tripped guard walks the same ladder.
     """
 
     def __init__(self, shape, L, bcs, layout=DataLayout.CELL,
                  green_kind=gr.GreenKind.CHAT2, eps_factor=2.0,
                  engine="xla", doubling="deferred", relayout="scheduled",
-                 order_policy="layout"):
+                 order_policy="layout", verify=None, verify_rtol=0.5):
         assert relayout in RELAYOUT_MODES, relayout
-        self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor,
-                              doubling=doubling, order_policy=order_policy)
-        self.engine = as_engine(engine)
+        assert verify in (None, "nan", "residual"), verify
+        self._base = dict(shape=tuple(shape), L=L, bcs=bcs, layout=layout,
+                          green_kind=green_kind, eps_factor=eps_factor,
+                          order_policy=order_policy)
+        self.verify = verify
+        self.verify_rtol = float(verify_rtol)
+        self.stats = {"solves": 0, "retries": 0, "verify_failures": 0,
+                      "degradations": []}
+        self._configure({"engine": as_engine(engine).name,
+                         "doubling": doubling, "relayout": relayout})
+
+    def _configure(self, cfg: dict):
+        """(Re)build the whole pipeline for one runtime config -- the
+        degradation ladder's rebuild hook (also the constructor's builder).
+        A fresh ``jax.jit`` wrapper is installed every time, so a retry
+        after a trace-time fault re-traces instead of replaying a poisoned
+        cache entry."""
+        b = self._base
+        self._cfg = dict(cfg)
+        self.plan = make_plan(b["shape"], b["L"], b["bcs"], b["layout"],
+                              b["green_kind"], b["eps_factor"],
+                              doubling=cfg["doubling"],
+                              order_policy=b["order_policy"])
+        self.engine = as_engine(cfg["engine"])
         self.schedule = build_schedule(self.plan, self.engine)
-        self.relayout = relayout
+        self.relayout = cfg["relayout"]
         # ONE Green copy, held in the layout the selected pipeline
         # multiplies in: natural for baseline, the spectral LAYOUT (active
         # axis of the last forward stage minor-most) for scheduled --
         # permuted once, at plan time
         g = build_green(self.plan)
-        if relayout == "scheduled":
+        self._green_nat = g          # natural layout: health diagnosis
+        if self.relayout == "scheduled":
             g = np.ascontiguousarray(
                 np.transpose(g, self.schedule.layouts.spectral))
         self._green = g
-        self._solve = jax.jit(self._solve_impl)
+        # jit wrappers are keyed by the active fault-plan token: arming a
+        # FaultPlan forces a retrace (the taint/fail_point hooks run at
+        # trace time), and the clean entry is never polluted by a tainted
+        # trace.  ``self._solve`` stays the clean-path jit (public-ish: the
+        # batch benchmark calls it directly).
+        self._solve = _fresh_jit(self._solve_impl)
+        self._solve_jits = {None: self._solve}
+
+    def _jitted(self):
+        from repro.runtime import faults
+        tok = faults.plan_token()
+        fn = self._solve_jits.get(tok)
+        if fn is None:
+            fn = _fresh_jit(self._solve_impl)
+            self._solve_jits[tok] = fn
+        return fn
 
     @property
     def input_shape(self):
@@ -488,12 +546,31 @@ class PoissonSolver:
         y = crop_doubling(y, plan.dirs)
         return y.astype(f.dtype)
 
-    def solve(self, f):
+    def solve(self, f, verify=None):
+        """Solve for ``f``; ``verify`` overrides the constructor-level
+        health-guard mode for this call ("nan" | "residual" | None)."""
+        from repro.runtime import faults, health, resilience
         f = jnp.asarray(f)
         grid = self.input_shape
         assert (f.ndim in (len(grid), len(grid) + 1)
                 and f.shape[f.ndim - len(grid):] == grid), (f.shape, grid)
-        return self._solve(f)
+        verify = self.verify if verify is None else verify
+        self.stats["solves"] += 1
+
+        def attempt():
+            faults.fail_point("solve.dispatch")
+            u = self._jitted()(f)
+            if verify:
+                health.check_solution(
+                    u, f, self.plan, mode=verify, rtol=self.verify_rtol,
+                    stats=self.stats,
+                    locate=lambda: health.locate_nonfinite_stage(
+                        self.plan, self.schedule, f, self._green_nat))
+            return u
+
+        return resilience.run_with_ladder(
+            attempt, config=self._cfg, reconfigure=self._configure,
+            stats=self.stats, describe="solve")
 
 
 # ---------------------------------------------------------------------------
@@ -541,11 +618,15 @@ def get_solver(shape, L, bcs, layout=DataLayout.CELL,
     names hit the same entry).  Entries are evicted least-recently-used
     beyond ``set_solver_cache_capacity`` (default 16 solvers).
     """
+    from repro.runtime import faults
     key = ("dist" if mesh is not None else "single",
            _freeze(shape), _freeze(L), _freeze(bcs), _freeze(layout),
            _freeze(green_kind), float(eps_factor),
            as_engine(engine), str(doubling), str(relayout),
-           str(order_policy), _freeze(mesh), _freeze(kw))
+           str(order_policy), _freeze(mesh), _freeze(kw),
+           # solvers traced under an armed fault plan must never be served
+           # to fault-free callers (their jit cache may carry the fault)
+           ("faults", faults.plan_token()))
     with _SOLVER_CACHE_LOCK:
         s = _SOLVER_CACHE.get(key)
         if s is not None:
@@ -561,10 +642,12 @@ def get_solver(shape, L, bcs, layout=DataLayout.CELL,
                                      relayout=relayout,
                                      order_policy=order_policy, **kw)
     else:
-        assert not kw, f"unexpected single-process solver kwargs: {kw}"
+        assert set(kw) <= {"verify", "verify_rtol"}, \
+            f"unexpected single-process solver kwargs: {kw}"
         s = PoissonSolver(shape, L, bcs, layout, green_kind, eps_factor,
                           engine=engine, doubling=doubling,
-                          relayout=relayout, order_policy=order_policy)
+                          relayout=relayout, order_policy=order_policy,
+                          **kw)
     with _SOLVER_CACHE_LOCK:
         _SOLVER_CACHE[key] = s
         _SOLVER_CACHE.move_to_end(key)
@@ -579,6 +662,20 @@ def clear_solver_cache():
         _SOLVER_CACHE.clear()
         for k in _SOLVER_CACHE_STATS:
             _SOLVER_CACHE_STATS[k] = 0
+
+
+def evict_solver_entries(mesh) -> int:
+    """Drop every cached solver planned against ``mesh`` (elastic
+    recovery: after a device loss the old mesh's solvers hold dead
+    devices and must never be served again).  Returns the eviction
+    count."""
+    frozen = _freeze(mesh)
+    with _SOLVER_CACHE_LOCK:
+        stale = [k for k in _SOLVER_CACHE if frozen in k]
+        for k in stale:
+            del _SOLVER_CACHE[k]
+            _SOLVER_CACHE_STATS["evictions"] += 1
+    return len(stale)
 
 
 def solver_cache_info() -> dict:

@@ -106,17 +106,55 @@ class DistributedPoissonSolver:
                  doubling: str = "deferred", relayout: str = "scheduled",
                  order_policy: str = "layout",
                  autotune_candidates=None, autotune_cache=None,
-                 autotune_batch=None):
+                 autotune_batch=None, autotune_budget=None,
+                 verify=None, verify_rtol=0.5, _green_cache=None):
         assert relayout in RELAYOUT_MODES, relayout
-        self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor,
-                              doubling=doubling, order_policy=order_policy)
-        self.engine = as_engine(engine)
-        self.schedule = build_schedule(self.plan, self.engine)
-        self.relayout = relayout
+        assert verify in (None, "nan", "residual"), verify
+        # full construction identity, kept for _configure (ladder rebuilds)
+        # and rebuild(mesh) (elastic recovery re-plans)
+        self._ctor = dict(shape=tuple(shape), L=L, bcs=bcs, layout=layout,
+                          green_kind=green_kind, axes=tuple(axes),
+                          batch_axis=batch_axis, eps_factor=eps_factor,
+                          dtype=dtype, lazy_green=lazy_green,
+                          order_policy=order_policy, comm_req=comm,
+                          autotune_candidates=autotune_candidates,
+                          autotune_cache=autotune_cache,
+                          autotune_batch=autotune_batch,
+                          autotune_budget=autotune_budget)
+        self.verify = verify
+        self.verify_rtol = float(verify_rtol)
+        self.stats = {"solves": 0, "retries": 0, "verify_failures": 0,
+                      "degradations": []}
         self.mesh = mesh
-        self.axes = axes
+        self.axes = tuple(axes)
         self.batch_axis = batch_axis
         self.dtype = dtype
+        # raw (unpadded, natural-layout, f64) transformed Green: computed
+        # once and reused across ladder rebuilds AND elastic rebuilds --
+        # the O(N^3) assembly never reruns on a recovery path
+        self._green_raw = _green_cache
+        self._configure({"engine": as_engine(engine).name, "comm": None,
+                         "doubling": doubling, "relayout": relayout})
+
+    def _configure(self, cfg: dict):
+        """(Re)build plan, Green layout, comm strategy and jits for one
+        runtime config (the degradation ladder's rebuild hook).  The first
+        build (``cfg["comm"] is None``) resolves the user's comm request
+        (possibly ``"auto"`` -- the plan-time tuner); ladder rebuilds carry
+        the degraded strategy name and keep n_chunks/fold."""
+        c = self._ctor
+        shape, L, bcs = c["shape"], c["L"], c["bcs"]
+        layout, green_kind = c["layout"], c["green_kind"]
+        eps_factor, order_policy = c["eps_factor"], c["order_policy"]
+        lazy_green, dtype = c["lazy_green"], c["dtype"]
+        axes, mesh = self.axes, self.mesh
+        self._cfg = dict(cfg)
+        self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor,
+                              doubling=cfg["doubling"],
+                              order_policy=order_policy)
+        self.engine = as_engine(cfg["engine"])
+        self.schedule = build_schedule(self.plan, self.engine)
+        self.relayout = cfg["relayout"]
         e = self.plan.order
         d0, d1, d2 = e
         p1 = mesh.shape[axes[0]]
@@ -142,13 +180,15 @@ class DistributedPoissonSolver:
         # Green's function is materialized directly in that layout at plan
         # time, so the pointwise multiply never relayouts anything
         gperm = (self.schedule.layouts.spectral
-                 if relayout == "scheduled" else (0, 1, 2))
+                 if self.relayout == "scheduled" else (0, 1, 2))
         if lazy_green:
             # dry-run: the kernel is an argument, never materialized
             self._green_np = jax.ShapeDtypeStruct(
                 tuple(gshape[d] for d in gperm), gdtype)
         else:
-            g = build_green(self.plan).astype(gdtype)
+            if self._green_raw is None:
+                self._green_raw = build_green(self.plan)
+            g = self._green_raw.astype(gdtype)
             gp = np.zeros(gshape, dtype=gdtype)
             gp[tuple(slice(0, s) for s in g.shape)] = g
             self._green_np = np.ascontiguousarray(np.transpose(gp, gperm))
@@ -164,11 +204,25 @@ class DistributedPoissonSolver:
         self.in_spec = self.input_spec(local_batch=False)
         self._green_dev = None
 
-        if isinstance(comm, str) and comm == "auto":
-            self.comm = self._autotune(autotune_candidates, autotune_cache,
-                                       autotune_batch)
-        else:
-            self.comm = as_comm(comm)
+        if cfg["comm"] is None:
+            # first build: resolve the user's request (incl. "auto")
+            comm_req = c["comm_req"]
+            if isinstance(comm_req, str) and comm_req == "auto":
+                self.comm = self._autotune(c["autotune_candidates"],
+                                           c["autotune_cache"],
+                                           c["autotune_batch"],
+                                           budget=c["autotune_budget"])
+            else:
+                self.comm = as_comm(comm_req)
+            self._cfg["comm"] = self.comm.strategy
+        elif getattr(self, "comm", None) is None \
+                or cfg["comm"] != self.comm.strategy:
+            # ladder rebuild: degraded strategy, n_chunks/fold carried over
+            prev = getattr(self, "comm", None) or CommConfig()
+            nc = prev.n_chunks if cfg["comm"] in ("pipelined", "overlap") \
+                else 1
+            self.comm = CommConfig(cfg["comm"], max(nc, 1), prev.fold)
+        self._green_dev = None
         self._jits = {}
         self._jit = self.jit_for(local_batch=False)
 
@@ -296,8 +350,13 @@ class DistributedPoissonSolver:
         return P(*parts, *self._spec_in_tail)
 
     def jit_for(self, local_batch: bool = False, donate: bool = True):
-        """The jitted distributed solve for one input rank (cached)."""
-        key = (bool(local_batch), bool(donate))
+        """The jitted distributed solve for one input rank (cached).
+
+        The cache key includes the active fault-plan token, so arming a
+        ``FaultPlan`` forces a retrace (the trace-time taint/fail_point
+        hooks run) and a tainted trace never shadows the clean entry."""
+        from repro.runtime import faults
+        key = (bool(local_batch), bool(donate), faults.plan_token())
         fn = self._jits.get(key)
         if fn is None:
             fn = self._build_jit(self.comm, donate=donate,
@@ -357,7 +416,7 @@ class DistributedPoissonSolver:
         )
 
     def _autotune(self, candidates, cache_path, batch=None,
-                  reps: int = 3) -> CommConfig:
+                  reps: int = 3, budget=None) -> CommConfig:
         # timed workload must match the production rank: the pod-sharded
         # batch (default: the pod mesh extent) when ``batch_axis`` is set,
         # or the IN-BLOCK multi-RHS batch when the caller states it
@@ -400,10 +459,12 @@ class DistributedPoissonSolver:
             # the unpack side of the collective is shape-dependent
             candidates = _default_candidates(folds=("pack", "unpack"))
         self.autotune_results = {}
+        self.autotune_census = {}
         key = self.autotune_key() + (("tuned_batch", batch),)
         return autotune_comm(key, time_cfg,
                              candidates=candidates, cache_path=cache_path,
-                             results=self.autotune_results)
+                             results=self.autotune_results,
+                             budget_s=budget, census=self.autotune_census)
 
     # -- public API ----------------------------------------------------------
 
@@ -439,27 +500,97 @@ class DistributedPoissonSolver:
                 NamedSharding(self.mesh, self.g_spec))
         return self._green_dev
 
-    def solve(self, f):
-        """f: global field, optionally with leading batch dims.
-
-        Accepted ranks: ``(*grid)``; ``(B, *grid)`` (in-block multi-RHS
-        batch, or the pod-sharded batch when ``batch_axis`` is set);
-        ``(B_pod, B, *grid)`` (both).
-        """
-        f = jnp.asarray(f, dtype=self.dtype)
-        base = 3 + (1 if self.batch_axis is not None else 0)
-        assert f.ndim in (base, base + 1), (f.shape, base)
-        local_batch = f.ndim == base + 1
-        f = self._pad_input(f)
+    def _dispatch(self, f, local_batch: bool):
+        """One solve attempt under the CURRENT config: pad, shard, run the
+        jitted pipeline, crop.  Re-entered by the degradation ladder after
+        ``_configure`` rebuilds -- padded extents/specs may differ per rung,
+        so everything derives from the raw user array each attempt."""
+        fp = self._pad_input(f)
         spec = self.input_spec(local_batch)
-        f = jax.device_put(f, NamedSharding(self.mesh, spec))
-        out = self.jit_for(local_batch)(f, self.green_device())
+        fp = jax.device_put(fp, NamedSharding(self.mesh, spec))
+        out = self.jit_for(local_batch)(fp, self.green_device())
         from repro.core.engine import crop_doubling
         d0, d1, d2 = self.plan.order
         off = out.ndim - 3
         out = _crop_dim(out, d1 + off, self._U[d1])
         out = _crop_dim(out, d2 + off, self._U[d2])
         return crop_doubling(out, self.plan.dirs)
+
+    def solve(self, f, verify=None):
+        """f: global field, optionally with leading batch dims.
+
+        Accepted ranks: ``(*grid)``; ``(B, *grid)`` (in-block multi-RHS
+        batch, or the pod-sharded batch when ``batch_axis`` is set);
+        ``(B_pod, B, *grid)`` (both).
+
+        ``verify`` (default: the constructor's setting) opts into post-solve
+        health checks ("nan" | "residual"); any failure -- injected fault,
+        comm error, non-finite output -- walks the degradation ladder
+        (engine, comm strategy, relayout schedule, doubling) before raising
+        a :class:`repro.runtime.SolveError` with stage provenance.
+        """
+        from repro.runtime import faults, health, resilience
+        f = jnp.asarray(f, dtype=self.dtype)
+        base = 3 + (1 if self.batch_axis is not None else 0)
+        assert f.ndim in (base, base + 1), (f.shape, base)
+        local_batch = f.ndim == base + 1
+        verify = self.verify if verify is None else verify
+
+        def attempt():
+            faults.fail_point("dist.dispatch")
+            out = self._dispatch(f, local_batch)
+            if verify:
+                locate = None
+                if not self._ctor["lazy_green"]:
+                    locate = lambda: health.locate_nonfinite_stage(
+                        self.plan, self.schedule, f, self._green_raw)
+                health.check_solution(out, f, self.plan, mode=verify,
+                                      rtol=self.verify_rtol,
+                                      stats=self.stats, locate=locate)
+            return out
+
+        out = resilience.run_with_ladder(
+            attempt, config=self._cfg, reconfigure=self._configure,
+            stats=self.stats, describe="dist.solve")
+        self.stats["solves"] += 1
+        return out
+
+    # -- elastic recovery ----------------------------------------------------
+
+    def rebuild(self, mesh, *, axes=None, comm=None):
+        """Re-plan on a (possibly shrunken) surviving mesh.
+
+        Returns a NEW solver for ``mesh``: the full construction identity is
+        replayed (so pencil splits, padding, specs and jits all match the
+        new device topology) while the expensive plan-time state is reused
+        -- the raw transformed Green's function is handed over (never
+        reassembled) and a comm ``"auto"`` request re-resolves through the
+        persisted autotune JSON cache keyed by the new mesh.  Ladder state
+        carries over: the current (possibly degraded) engine/relayout/
+        doubling config seeds the new solver, and stale ``get_solver``
+        entries for the OLD mesh are evicted so no caller can obtain a
+        solver bound to dead devices.
+        """
+        from repro.core.solver import evict_solver_entries
+        evict_solver_entries(self.mesh)
+        c = self._ctor
+        new = DistributedPoissonSolver(
+            c["shape"], c["L"], c["bcs"], c["layout"], c["green_kind"],
+            mesh=mesh, axes=tuple(axes) if axes is not None else self.axes,
+            comm=comm if comm is not None else c["comm_req"],
+            batch_axis=self.batch_axis, eps_factor=c["eps_factor"],
+            dtype=self.dtype, lazy_green=c["lazy_green"],
+            engine=self._cfg["engine"], doubling=self._cfg["doubling"],
+            relayout=self._cfg["relayout"],
+            order_policy=c["order_policy"],
+            autotune_candidates=c["autotune_candidates"],
+            autotune_cache=c["autotune_cache"],
+            autotune_batch=c["autotune_batch"],
+            autotune_budget=c["autotune_budget"],
+            verify=self.verify, verify_rtol=self.verify_rtol,
+            _green_cache=self._green_raw)
+        new.stats["degradations"] = list(self.stats["degradations"])
+        return new
 
     def lower(self, batch=None, dtype=None, *, local_batch: bool = False):
         """Lower the jitted distributed solve with ShapeDtypeStructs (dry-run).

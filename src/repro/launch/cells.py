@@ -198,8 +198,10 @@ def _build_poisson_cell(shape_name, mesh, comm):
             folds=(("pack", "unpack") if CONFIG.relayout == "scheduled"
                    else ("pack",))),
         autotune_cache=CONFIG.comm_autotune_cache or None,
+        autotune_budget=CONFIG.comm_autotune_budget_s or None,
         # comm="auto" must time the rank it will run: the in-block batch
-        autotune_batch=CONFIG.batch if local_batch else None)
+        autotune_batch=CONFIG.batch if local_batch else None,
+        verify=CONFIG.verify or None, verify_rtol=CONFIG.verify_rtol)
     f_sds = jax.ShapeDtypeStruct(
         solver.padded_input_shape(batch), jnp.float32,
         sharding=NamedSharding(mesh, solver.input_spec(local_batch)))

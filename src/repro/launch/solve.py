@@ -48,6 +48,15 @@ def main(argv=None):
                     help="driver steps; each step re-acquires the solver "
                          "through the global plan cache (CFD-loop shape)")
     ap.add_argument("--repeats", type=int, default=3)
+    ap.add_argument("--ckpt", default=None,
+                    help="checkpoint directory; enables the survivable "
+                         "--steps loop (periodic save, restart/resume, "
+                         "elastic rebuild on injected device loss)")
+    ap.add_argument("--ckpt-every", type=int, default=2,
+                    help="checkpoint every k steps (with --ckpt)")
+    ap.add_argument("--verify", default=None,
+                    choices=["nan", "residual"],
+                    help="opt-in per-solve health guard (see runtime.health)")
     args = ap.parse_args(argv)
 
     import os
@@ -112,6 +121,10 @@ def main(argv=None):
     if args.batch > 1:
         rhs = np.broadcast_to(rhs, (args.batch,) + rhs.shape).copy()
 
+    if args.ckpt is not None:
+        return _run_survivable(args, solver, mesh, comm, rhs, sol, bcs,
+                               layout)
+
     u = solver.solve(rhs)          # compile + warm
     u.block_until_ready()
     t0 = time.time()
@@ -134,6 +147,92 @@ def main(argv=None):
           f"{dt*1e3:.1f} ms/solve, E_inf={err:.3e}, "
           f"throughput {thr:.1f} MB/s/rank, "
           f"plan-cache {ci['hits']} hits / {ci['misses']} misses")
+    return err
+
+
+def _run_survivable(args, solver, mesh, comm, rhs, sol, bcs, layout):
+    """The --ckpt variant of the --steps loop: a long-running CFD-style
+    driver that checkpoints every ``--ckpt-every`` steps, restarts from the
+    last valid step, and survives an injected device loss by rebuilding the
+    solver on the shrunken surviving mesh (elastic recovery) and resuming
+    from the last checkpoint.  Faults are armed via ``$REPRO_FAULTS``."""
+    import contextlib
+    import os
+
+    import jax
+    from jax.sharding import Mesh
+    from repro.ckpt import checkpoint as ck
+    from repro.runtime import faults
+
+    plan = faults.plan_from_env()
+    with (plan if plan is not None else contextlib.nullcontext()):
+        # the driver state: an accumulated field (the stand-in for the
+        # evolving CFD solution) -- what checkpoints must preserve
+        acc = np.zeros(np.shape(rhs), dtype=np.float64)
+        last = ck.latest_step(args.ckpt)
+        step = 0
+        if last is not None:
+            acc = np.array(ck.restore(args.ckpt, last, acc),
+                           dtype=np.float64)
+            step = last + 1
+            print(f"[solve] resuming from checkpoint step {last}")
+        p1, p2 = args.p1, args.p2
+        losses = 0
+        while step < args.steps:
+            if faults.should_fire("device_loss", step=step) and \
+                    hasattr(solver, "rebuild"):
+                # half the devices are gone: shrink to the survivors,
+                # re-plan (Green + autotune cache reused), roll back to the
+                # last checkpoint and resume there
+                losses += 1
+                if p1 > 1:
+                    p1 //= 2
+                elif p2 > 1:
+                    p2 //= 2
+                devs = np.array(jax.devices()[:p1 * p2]).reshape(p1, p2)
+                mesh = Mesh(devs, mesh.axis_names)
+                print(f"[solve] device loss at step {step}: rebuilding on "
+                      f"({p1}x{p2}) surviving mesh")
+                solver = solver.rebuild(mesh)
+                last = ck.latest_step(args.ckpt)
+                if last is None:
+                    acc = np.zeros_like(acc)
+                    step = 0
+                else:
+                    acc = np.array(ck.restore(args.ckpt, last, acc),
+                           dtype=np.float64)
+                    step = last + 1
+                print(f"[solve] resumed at step {step}")
+                continue
+            # per-step rhs scaling: steps are distinguishable, so a resume
+            # from the wrong step shows up in the final accumulated field
+            u = solver.solve(rhs * (1.0 / (1 + step)), verify=args.verify)
+            acc += np.asarray(u, dtype=np.float64)
+            if (step + 1) % args.ckpt_every == 0:
+                ck.save(args.ckpt, step, acc)
+            step += 1
+
+    scale = sum(1.0 / (1 + k) for k in range(args.steps))
+    acc0 = acc[0] if args.batch > 1 else acc
+    err = float(np.max(np.abs(acc0 / scale - sol)))
+    stats = getattr(solver, "stats", {})
+    ndeg = len(stats.get("degradations", ()))
+    print(f"[solve] survivable loop: {args.steps} steps on final "
+          f"({p1}x{p2}) mesh, {losses} device losses, "
+          f"{ndeg} degradations, E_inf={err:.3e}")
+    report_path = os.environ.get("REPRO_CHAOS_LOG")
+    if report_path:
+        # the CI chaos job uploads this as its artifact: what was injected,
+        # what fired, what the ladder did about it, and the final error
+        import json
+        with open(report_path, "w") as fh:
+            json.dump({"steps": args.steps, "final_mesh": [p1, p2],
+                       "device_losses": losses, "err_inf": err,
+                       "fault_log": plan.log if plan is not None else [],
+                       "retries": stats.get("retries", 0),
+                       "degradations": stats.get("degradations", [])},
+                      fh, indent=2)
+        print(f"[solve] chaos report written to {report_path}")
     return err
 
 

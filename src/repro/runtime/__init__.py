@@ -1,0 +1,9 @@
+"""Resilient solve runtime (DESIGN.md #10).
+
+``faults``      deterministic fault injection (the chaos-test substrate)
+``resilience``  graceful-degradation ladder, retry policy, SolveError
+``health``      numerical health guards (NaN/Inf, spectral/FD residual)
+"""
+from . import faults, health, resilience  # noqa: F401
+
+from .resilience import SolveError  # noqa: F401

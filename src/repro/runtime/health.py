@@ -1,0 +1,133 @@
+"""Numerical health guards: NaN/Inf detection and a cheap residual check.
+
+``verify="nan"`` guards the solve OUTPUT (plus the input) for finiteness;
+``verify="residual"`` additionally checks the relative 7-point
+finite-difference Laplacian residual ``||lap_h(u) - f|| / ||f||`` on the
+INTERIOR of the valid extents.  The residual is a consistency gate, not an
+accuracy gate: the solver is spectral, the FD stencil is 2nd order, so a
+healthy solve sits at discretization level (percent-ish on coarse grids)
+while a corrupted one (NaN anywhere, a stage fed garbage, a wrong-layout
+Green multiply) lands at NaN or O(1) -- the default ``rtol=0.5`` separates
+the two decisively without false-failing coarse healthy solves.
+
+When the output is non-finite, ``locate_nonfinite_stage`` re-runs the
+reference (natural-layout) pipeline EAGERLY with a finiteness check after
+every stage -- the per-stage NaN/Inf guard -- and the resulting stage name
+becomes the ``HealthError`` provenance the ladder and ``SolveError``
+report.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+__all__ = ["HealthError", "check_finite", "fd_residual", "check_solution",
+           "locate_nonfinite_stage"]
+
+
+class HealthError(RuntimeError):
+    """A numerical health guard tripped; carries stage provenance."""
+
+    def __init__(self, msg: str, *, stage: str = "verify", detail=None):
+        super().__init__(msg)
+        self.stage = stage
+        self.detail = detail
+        self.transient = False
+
+
+def _finite(x) -> bool:
+    import jax.numpy as jnp
+    return bool(jnp.isfinite(x).all())
+
+
+def check_finite(name: str, x):
+    if not _finite(x):
+        raise HealthError(f"non-finite values at {name}", stage=name)
+
+
+def fd_residual(u, f, plan) -> float:
+    """Relative interior FD-Laplacian residual of ``u`` against ``f``.
+
+    Works on user-shaped arrays (leading batch axes allowed); only the
+    interior of each grid axis enters, so boundary conventions (overwritten
+    Dirichlet zeros, node-periodic duplicated points) never pollute it.
+    """
+    import jax.numpy as jnp
+    u = jnp.asarray(u)
+    f = jnp.asarray(f)
+    ndim = len(plan.dirs)
+    off = u.ndim - ndim
+
+    def shifted(x, d, s):
+        sl = [slice(None)] * x.ndim
+        for dd in range(ndim):
+            lo, hi = 1, x.shape[off + dd] - 1
+            if dd == d:
+                lo, hi = lo + s, hi + s
+            sl[off + dd] = slice(lo, hi)
+        return x[tuple(sl)]
+
+    lap = None
+    for d, p in enumerate(plan.dirs):
+        h2 = p.h * p.h
+        term = (shifted(u, d, 1) - 2.0 * shifted(u, d, 0)
+                + shifted(u, d, -1)) / h2
+        lap = term if lap is None else lap + term
+    f_int = shifted(f, -1, 0)
+    num = jnp.linalg.norm(jnp.ravel(lap - f_int))
+    den = jnp.linalg.norm(jnp.ravel(f_int))
+    return float(num / jnp.maximum(den, np.finfo(np.float32).tiny))
+
+
+def check_solution(u, f, plan, mode: str = "nan", rtol: float = 0.5,
+                   stats: dict = None, locate=None):
+    """The opt-in solve verifier.  ``mode``: "nan" (finiteness only) or
+    "residual" (finiteness + FD residual below ``rtol``).  ``locate``, when
+    given, maps a non-finite output to its first-bad-stage provenance."""
+    assert mode in ("nan", "residual"), mode
+    if not _finite(u):
+        if stats is not None:
+            stats["verify_failures"] = stats.get("verify_failures", 0) + 1
+        stage = "verify.nan"
+        if locate is not None:
+            try:
+                stage = "verify.nan@" + locate()
+            except Exception:  # diagnosis is best-effort
+                pass
+        raise HealthError("solve output contains NaN/Inf", stage=stage)
+    if mode == "residual":
+        r = fd_residual(u, f, plan)
+        if not np.isfinite(r) or r > rtol:
+            if stats is not None:
+                stats["verify_failures"] = \
+                    stats.get("verify_failures", 0) + 1
+            raise HealthError(
+                f"FD residual {r:.3g} exceeds rtol={rtol} "
+                f"(corrupted solve)", stage="verify.residual", detail=r)
+        if stats is not None:
+            stats["last_residual"] = r
+
+
+def locate_nonfinite_stage(plan, sched, f, green) -> str:
+    """Per-stage NaN/Inf guard: walk the reference (natural-layout, eager)
+    pipeline and return the first stage whose output is non-finite.
+    ``green`` is the NATURAL-layout transformed Green's function.  Used for
+    provenance only -- numerically it is the baseline pipeline, which all
+    scheduled variants are equivalent to."""
+    import jax.numpy as jnp
+    from repro.core.engine import (bwd_1d, fwd_1d, materialize_doubling)
+
+    if not _finite(f):
+        return "input"
+    y = materialize_doubling(jnp.asarray(f), plan.dirs)
+    for d in plan.order:
+        y = fwd_1d(y, plan.dirs[d], sched)
+        if not _finite(y):
+            return f"fwd.{d}"
+    y = sched.green_multiply(y, jnp.asarray(green).astype(y.dtype))
+    if not _finite(y):
+        return "green"
+    for d in reversed(plan.order):
+        y = bwd_1d(y, plan.dirs[d], sched)
+        if not _finite(y):
+            return f"bwd.{d}"
+    return "output"

@@ -1,0 +1,157 @@
+"""Graceful-degradation ladder + retry policy (DESIGN.md #10).
+
+Every configurable fast path of the solve has a documented slower-but-safer
+fallback; on failure the runtime walks them one knob at a time:
+
+    retry (bounded exponential backoff, transient errors only)
+      -> engine    pallas    -> xla        (kernel lowering / exec faults)
+      -> comm      overlap   -> pipelined -> a2a   (collective faults)
+                   fused     -> pipelined
+      -> relayout  scheduled -> baseline   (fused-transpose faults)
+      -> doubling  deferred  -> upfront    (pruned-extent faults)
+
+Each downgrade is recorded as a structured dict in the solver's
+``stats["degradations"]`` (and warned once); when the ladder is exhausted a
+``SolveError`` carrying the stage provenance and the full degradation trail
+is raised.  The ladder is deliberately one-directional and monotonic: a
+solve only ever gets more conservative, so a deterministic fault (e.g. a
+Pallas kernel that cannot lower) is routed around in at most
+``len(ladder)`` rebuilds and the result -- all rungs are numerically
+equivalent pipelines -- matches the fault-free baseline.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from dataclasses import dataclass
+
+__all__ = ["SolveError", "RetryPolicy", "LADDER", "next_rung",
+           "is_transient", "run_with_ladder"]
+
+
+# knob -> (from, to) downgrades, walked in priority order; one downgrade
+# per failed attempt (the "step down one rung" contract)
+LADDER = (
+    ("engine",   (("pallas", "xla"),)),
+    ("comm",     (("overlap", "pipelined"), ("fused", "pipelined"),
+                  ("pipelined", "a2a"))),
+    ("relayout", (("scheduled", "baseline"),)),
+    ("doubling", (("deferred", "upfront"),)),
+)
+
+
+class SolveError(RuntimeError):
+    """Terminal solve failure: the ladder is exhausted (or the error is not
+    one a config downgrade can address).  Carries the failing stage, the
+    final config, and the structured degradation trail."""
+
+    def __init__(self, msg: str, *, stage=None, config=None,
+                 degradations=()):
+        super().__init__(msg)
+        self.stage = stage
+        self.config = dict(config or {})
+        self.degradations = list(degradations)
+
+
+@dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded exponential backoff for transient failures (the whole-solve
+    budget: ``retries`` attempts across all rungs)."""
+
+    retries: int = 2
+    base_delay: float = 0.05
+    max_delay: float = 1.0
+
+
+def next_rung(cfg: dict):
+    """One downgrade below ``cfg``: ``(new_cfg, action)`` or None when the
+    config is already fully conservative."""
+    for knob, downs in LADDER:
+        cur = cfg.get(knob)
+        for frm, to in downs:
+            if cur == frm:
+                new = dict(cfg)
+                new[knob] = to
+                return new, f"{knob}:{frm}->{to}"
+    return None
+
+
+# substrings marking an execution error as transient (retry-worthy) when it
+# does not carry an explicit ``transient`` attribute -- the runtime-level
+# statuses a TPU fleet surfaces for preemptions and flaky links
+_TRANSIENT_MARKERS = ("RESOURCE_EXHAUSTED", "UNAVAILABLE",
+                      "DEADLINE_EXCEEDED", "ABORTED")
+
+
+def is_transient(e: BaseException) -> bool:
+    t = getattr(e, "transient", None)
+    if t is not None:
+        return bool(t)
+    msg = str(e)
+    return any(m in msg for m in _TRANSIENT_MARKERS)
+
+
+_WARNED: set = set()
+
+
+def _warn_once(msg: str):
+    if msg not in _WARNED:
+        _WARNED.add(msg)
+        warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def run_with_ladder(attempt, *, config: dict, reconfigure, stats: dict,
+                    policy: RetryPolicy = None, describe: str = "solve",
+                    diagnose=None, sleep=time.sleep):
+    """Run ``attempt()`` under the degradation ladder.
+
+    ``attempt()`` performs one full try (dispatch + optional verify) under
+    the CURRENT config and raises on failure.  ``reconfigure(cfg)``
+    rebuilds the solver's pipeline for ``cfg`` -- it is also invoked for
+    transient retries with the unchanged config, which forces a fresh
+    trace/compile (the analogue of re-establishing a collective after a
+    link blip).  ``diagnose(exc)`` may return a finer stage-provenance
+    string for errors that carry none.  Returns the first successful
+    attempt's result; raises ``SolveError`` when the ladder is exhausted.
+    """
+    policy = policy or RetryPolicy()
+    cfg = dict(config)
+    retries_left = policy.retries
+    delay = policy.base_delay
+    records = stats.setdefault("degradations", [])
+    while True:
+        try:
+            return attempt()
+        except SolveError:
+            raise
+        except Exception as e:  # noqa: BLE001 -- every failure walks the ladder
+            stage = getattr(e, "stage", None)
+            if stage is None and diagnose is not None:
+                try:
+                    stage = diagnose(e)
+                except Exception:  # diagnosis is best-effort
+                    stage = None
+            stage = stage or describe
+            if is_transient(e) and retries_left > 0:
+                retries_left -= 1
+                stats["retries"] = stats.get("retries", 0) + 1
+                _warn_once(f"{describe}: transient failure at {stage} "
+                           f"({type(e).__name__}); retrying with backoff")
+                sleep(delay)
+                delay = min(2.0 * delay, policy.max_delay)
+                reconfigure(dict(cfg))
+                continue
+            nxt = next_rung(cfg)
+            if nxt is None:
+                raise SolveError(
+                    f"{describe}: failed at stage {stage!r} with the "
+                    f"ladder exhausted (config {cfg}): {e!r}",
+                    stage=stage, config=cfg, degradations=records) from e
+            cfg, action = nxt
+            rec = {"stage": stage, "action": action,
+                   "error": f"{type(e).__name__}: {e}"[:300],
+                   "config": dict(cfg)}
+            records.append(rec)
+            _warn_once(f"{describe}: degrading {action} after failure at "
+                       f"stage {stage!r} ({type(e).__name__})")
+            reconfigure(dict(cfg))
