@@ -24,10 +24,10 @@ def run(quick=True):
     for case, greens in plan.items():
         _, bcs = CASES[case]
         for g in greens:
-            errs, t0 = [], time.time()
+            errs, t0 = [], time.perf_counter()
             for n in ns:
                 errs.append(linf_error(case, bcs, n, DataLayout.NODE, g))
-            us = (time.time() - t0) / len(ns) * 1e6
+            us = (time.perf_counter() - t0) / len(ns) * 1e6
             order = float(np.log(errs[0] / errs[-1]) /
                           np.log(ns[-1] / ns[0]))
             rows.append((f"fig{ {'A':6,'B':7,'C':8}[case] }_conv_{case}_{g}",

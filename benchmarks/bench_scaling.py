@@ -43,10 +43,10 @@ for (p1, p2) in grids:
                                  comm=CommConfig(strategy="pipelined"))
     f = np.random.default_rng(0).standard_normal((n,n,n)).astype(np.float32)
     u = s.solve(f); u.block_until_ready()
-    t0 = time.time(); reps = 3
+    t0 = time.perf_counter(); reps = 3
     for _ in range(reps):
         u = s.solve(f); u.block_until_ready()
-    dt = (time.time() - t0) / reps
+    dt = (time.perf_counter() - t0) / reps
     rows.append({"ndev": ndev, "n": n, "t": dt})
 print(json.dumps(rows))
 """

@@ -1,0 +1,141 @@
+"""Serving latency/throughput harness -> BENCH_serve.json.
+
+Drives ``repro.serve.PoissonServer`` with 8 concurrent tenants bursting
+requests over mixed plan keys (fully-unbounded + all-periodic pencil
+plans on an 8-device host-platform (2 x 4) mesh, the bench_batch
+configuration), twice:
+
+* **batched**    -- coalescing on (``max_batch=8``): same-key requests
+                    merge into one batched multi-RHS solve;
+* **sequential** -- admission serialized (``max_batch=1``): every request
+                    is its own solve, the pre-server baseline.
+
+The headline is the coalescing throughput speedup (acceptance bar:
+>= 1.5x -- the PR-3 batched pipeline measured 2.34x at B=8 on this mesh,
+serving overhead eats some of it), plus per-tenant p50/p95/p99 latency
+and the bit-exactness check: every served response must equal the
+per-request reference solve EXACTLY (coalescing and rank padding never
+perturb a row).
+
+``--check`` (the CI serve job) exits non-zero when the speedup drops
+below the bar or any response deviates.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys
+import jax
+from repro.core.bc import BCType
+from repro.core.comm import CommConfig
+from repro.serve import PlanSpec
+from repro.launch.serve import run_harness
+
+cfg = json.loads(sys.argv[1])
+n, tenants, requests = cfg["n"], cfg["tenants"], cfg["requests"]
+P, U = BCType.PER, BCType.UNB
+mesh = jax.make_mesh((2, 4), ("data", "model"))
+kw = (("comm", CommConfig("overlap", 2)),)
+specs = [
+    PlanSpec(shape=(n, n, n), bcs=((U, U),) * 3, mesh=mesh, solver_kw=kw),
+    PlanSpec(shape=(n, n, n), bcs=((P, P),) * 3, mesh=mesh, solver_kw=kw),
+]
+common = dict(n=n, tenants=tenants, requests=requests,
+              max_delay_ms=cfg["max_delay_ms"], specs=specs)
+batched = run_harness(max_batch=cfg["max_batch"], check=True, **common)
+sequential = run_harness(max_batch=1, check=False, **common)
+print("BENCH_JSON " + json.dumps(
+    {"batched": batched, "sequential": sequential}, default=str))
+"""
+
+
+def _sweep(n, tenants, requests, max_batch, max_delay_ms):
+    env = dict(os.environ, PYTHONPATH="src")
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run(
+        [sys.executable, "-c", _SCRIPT,
+         json.dumps({"n": n, "tenants": tenants, "requests": requests,
+                     "max_batch": max_batch,
+                     "max_delay_ms": max_delay_ms})],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("BENCH_JSON ")][-1]
+    return json.loads(line[len("BENCH_JSON "):])
+
+
+def run(quick=True):
+    n, tenants = 32, 8
+    requests = 6 if quick else 12
+    try:
+        res = _sweep(n, tenants, requests, max_batch=8, max_delay_ms=4.0)
+    except RuntimeError as e:
+        return [("serve_error", 0.0, str(e)[-200:])]
+    batched, seq = res["batched"], res["sequential"]
+    speedup = seq["wall_s"] / batched["wall_s"]
+    maxdev = batched.get("max_abs_dev_vs_individual", float("nan"))
+    payload = {
+        "mode": "quick" if quick else "full",
+        "grid": n, "mesh": [2, 4], "bcs": ["unb", "per"],
+        "comm": "overlap:2", "tenants": tenants,
+        "requests_per_tenant": requests, "max_batch": 8,
+        "headline": {
+            "coalescing_speedup_vs_sequential": speedup,
+            "batched_rps": batched["throughput_rps"],
+            "sequential_rps": seq["throughput_rps"],
+            "mean_batch_occupancy": batched["mean_batch_occupancy"],
+            "max_abs_dev_vs_individual": maxdev,
+        },
+        "batched": batched, "sequential": seq,
+    }
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, "BENCH_serve.json"), "w") as fh:
+        json.dump(payload, fh, indent=2, default=str)
+    rows = [("serve_batched", batched["wall_s"] * 1e6,
+             f"{batched['throughput_rps']:.0f}rps"),
+            ("serve_sequential", seq["wall_s"] * 1e6,
+             f"{seq['throughput_rps']:.0f}rps"),
+            ("serve_speedup", 0.0, f"{speedup:.2f}x_vs_sequential"),
+            ("serve_maxdev", 0.0, f"{maxdev:.1e}")]
+    for name, t in sorted(batched["tenants_stats"].items()):
+        rows.append((f"serve_{name}", t["p50_ms"] * 1e3,
+                     f"p95={t['p95_ms']:.1f}ms_p99={t['p99_ms']:.1f}ms"))
+    return rows
+
+
+def check(path="BENCH_serve.json") -> int:
+    """CI gate: coalescing >= 1.5x over sequential admission AND every
+    response bit-exact vs the per-request reference solves."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    with open(os.path.join(root, path)) as fh:
+        payload = json.load(fh)
+    h = payload["headline"]
+    bad = []
+    if not h["coalescing_speedup_vs_sequential"] >= 1.5:
+        bad.append(f"coalescing speedup "
+                   f"{h['coalescing_speedup_vs_sequential']:.2f}x < 1.5x")
+    if not float(h["max_abs_dev_vs_individual"]) == 0.0:
+        bad.append(f"served responses deviate from per-request solves "
+                   f"(max |dev| {h['max_abs_dev_vs_individual']})")
+    for msg in bad:
+        print(f"CHECK FAIL: {msg}", file=sys.stderr)
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+    from common import emit
+    out_rows = run(quick="--full" not in sys.argv)
+    emit(out_rows)
+    if any(name == "serve_error" for name, _, _ in out_rows):
+        sys.exit(1)
+    if "--check" in sys.argv:
+        sys.exit(check())

@@ -10,11 +10,11 @@ def time_fn(fn, *args, repeats=3, warmup=1, **kw):
     for _ in range(warmup):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
-    t0 = time.time()
+    t0 = time.perf_counter()
     for _ in range(repeats):
         out = fn(*args, **kw)
         jax.block_until_ready(out)
-    return (time.time() - t0) / repeats
+    return (time.perf_counter() - t0) / repeats
 
 
 def interleaved_min(fns: dict, reps: int = 7) -> dict:

@@ -33,12 +33,12 @@ tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
 
 decode = jax.jit(lambda p, t, c, pos: tf.decode_step(p, cfg, t, c, pos))
 out = [tok]
-t0 = time.time()
+t0 = time.perf_counter()
 for i in range(args.gen - 1):
     logits, caches = decode(params, tok, caches, args.prompt_len + i)
     tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
     out.append(tok)
-dt = time.time() - t0
+dt = time.perf_counter() - t0
 gen = np.asarray(jnp.concatenate(out, axis=1))
 print(f"generated {gen.shape} tokens, "
       f"{args.batch * (args.gen - 1) / dt:,.0f} tok/s (greedy)")

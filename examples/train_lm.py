@@ -42,14 +42,14 @@ if start:
     print(f"resumed from step {start}")
 
 step_fn = jax.jit(train_step_fn(cfg))
-t0 = time.time()
+t0 = time.perf_counter()
 for step in range(start, args.steps):
     state, m = step_fn(state, synthetic_batch(cfg, step, args.batch,
                                               args.seq))
     if step % 20 == 0 or step == args.steps - 1:
         loss = float(m["loss"])
         tput = args.batch * args.seq * (step - start + 1) / \
-            (time.time() - t0)
+            (time.perf_counter() - t0)
         print(f"step {step:4d}  loss {loss:.4f}  {tput:,.0f} tok/s")
     if (step + 1) % 100 == 0:
         ck.save(args.ckpt_dir, step + 1, state)

@@ -57,7 +57,7 @@ __all__ = [
     "make_strategy",
     "topology_switch", "pad_axis", "crop_axis",
     "autotune_comm", "autotune_candidates",
-    "clear_autotune_cache", "all_reduce_mean",
+    "clear_autotune_cache", "all_reduce_mean", "reset_warn_once",
 ]
 
 
@@ -112,6 +112,15 @@ def _warn_once(msg: str):
     if msg not in _WARNED:
         _WARNED.add(msg)
         warnings.warn(msg, RuntimeWarning, stacklevel=4)
+
+
+def reset_warn_once():
+    """Re-arm every one-shot diagnostic.  The module-global ``_WARNED`` set
+    otherwise never resets, so a long-lived serve process would suppress
+    per-plan warnings forever (and tests would pass/fail by execution
+    order).  Wired into ``solver.clear_solver_cache`` and the test-session
+    fixtures; servers may also call it on a stats epoch."""
+    _WARNED.clear()
 
 
 def _split_chunks(x, ax: int, n: int):
@@ -411,32 +420,58 @@ def _cache_file_load(path: str) -> dict:
     try:
         with open(path) as fh:
             data = json.load(fh)
-    except (OSError, ValueError):
+    except OSError:                 # absent cache: normal first-run state
+        return {}
+    except ValueError:
+        # torn/corrupt JSON (e.g. a write interrupted before the atomic
+        # store below landed, or on-disk rot): warn once and fall through
+        # to a live sweep instead of raising at startup
+        _warn_once(f"comm: autotune cache {path} is corrupt/truncated; "
+                   "ignoring it (a live sweep will rewrite it)")
         return {}
     if not isinstance(data, dict):
+        _warn_once(f"comm: autotune cache {path} holds non-dict JSON; "
+                   "ignoring it (a live sweep will rewrite it)")
         return {}
     # chaos hook: an armed ``corrupt_cache`` spec rots the loaded entries
     # in place; the consumer must treat them as malformed and re-sweep
     return _faults.mangle_cache_entry(data)
 
 
+_CACHE_FILE_LOCK = threading.Lock()
+
+
 def _cache_file_store(path: str, key: str, cfg: CommConfig, timings: dict,
                       skipped=()):
-    data = _cache_file_load(path)
-    data[key] = {"strategy": cfg.strategy, "n_chunks": cfg.n_chunks,
-                 "fold": cfg.fold,
-                 "timings_us": {k: round(v * 1e6, 1)
-                                for k, v in timings.items()}}
-    if skipped:                     # budget-abandoned candidates, on record
-        data[key]["skipped_budget"] = list(skipped)
-    try:
-        d = os.path.dirname(path)
-        if d:
-            os.makedirs(d, exist_ok=True)
-        with open(path, "w") as fh:
-            json.dump(data, fh, indent=1, sort_keys=True)
-    except OSError as e:            # cache is best-effort, never fatal
-        _warn_once(f"comm: cannot persist autotune cache to {path}: {e}")
+    """Read-merge-write one winner into the JSON cache, atomically.
+
+    Concurrent server workers (threads in this process via the lock,
+    sibling processes via tmp+``os.replace``) never interleave partial
+    writes: a reader sees either the old file or the new one, complete --
+    a crash mid-store leaves at worst a stray ``*.tmp.<pid>`` file, never
+    a truncated cache that breaks the next startup's ``json.load``."""
+    with _CACHE_FILE_LOCK:
+        data = _cache_file_load(path)
+        data[key] = {"strategy": cfg.strategy, "n_chunks": cfg.n_chunks,
+                     "fold": cfg.fold,
+                     "timings_us": {k: round(v * 1e6, 1)
+                                    for k, v in timings.items()}}
+        if skipped:                 # budget-abandoned candidates, on record
+            data[key]["skipped_budget"] = list(skipped)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            d = os.path.dirname(path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            with open(tmp, "w") as fh:
+                json.dump(data, fh, indent=1, sort_keys=True)
+            os.replace(tmp, path)   # atomic commit (same filesystem)
+        except OSError as e:        # cache is best-effort, never fatal
+            _warn_once(f"comm: cannot persist autotune cache to {path}: {e}")
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
 
 
 def _timed_call(fn, arg, budget_s):

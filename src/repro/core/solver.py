@@ -37,7 +37,8 @@ from .engine import (RELAYOUT_MODES, as_engine, build_schedule,
 
 __all__ = ["Plan1D", "PoissonPlan", "PoissonSolver", "make_plan",
            "get_solver", "clear_solver_cache", "solver_cache_info",
-           "set_solver_cache_capacity", "evict_solver_entries"]
+           "set_solver_cache_capacity", "evict_solver_entries",
+           "evict_solver_instance"]
 
 
 @dataclass(frozen=True)
@@ -588,8 +589,28 @@ class PoissonSolver:
 
 _SOLVER_CACHE: OrderedDict = OrderedDict()
 _SOLVER_CACHE_LOCK = threading.Lock()
-_SOLVER_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0}
+# key -> in-flight construction (single-flight): N concurrent misses for
+# the same key build the solver ONCE; the other N-1 callers park on the
+# builder's event and are handed the same instance ("coalesced" in stats).
+# Without this the miss path built outside the lock, so a thundering herd
+# paid plan+autotune+jit N times and the last insert silently overwrote
+# the N-1 siblings (skewing hit/miss/eviction accounting on top).
+_SOLVER_BUILDS: dict = {}
+_SOLVER_CACHE_STATS = {"hits": 0, "misses": 0, "evictions": 0,
+                       "coalesced": 0, "build_failures": 0}
 _SOLVER_CACHE_CAPACITY = 16
+
+
+class _SolverBuild:
+    """One in-flight get_solver construction: the builder thread fills
+    ``result``/``exc`` and sets ``done``; coalesced waiters block on it."""
+
+    __slots__ = ("done", "result", "exc")
+
+    def __init__(self):
+        self.done = threading.Event()
+        self.result = None
+        self.exc = None
 
 
 def _freeze(v):
@@ -617,6 +638,13 @@ def get_solver(shape, L, bcs, layout=DataLayout.CELL,
     part of the cache key, as is the mesh itself: same devices + same axis
     names hit the same entry).  Entries are evicted least-recently-used
     beyond ``set_solver_cache_capacity`` (default 16 solvers).
+
+    Construction is SINGLE-FLIGHT per key: when N threads miss the same
+    key concurrently (the serve thundering herd), exactly one of them
+    builds -- the rest park on the builder and receive the same instance
+    (counted as ``coalesced`` in ``solver_cache_info``).  A failed build
+    re-raises in every parked caller and leaves no cache entry behind, so
+    the next request retries cleanly.
     """
     from repro.runtime import faults
     key = ("dist" if mesh is not None else "single",
@@ -627,41 +655,89 @@ def get_solver(shape, L, bcs, layout=DataLayout.CELL,
            # solvers traced under an armed fault plan must never be served
            # to fault-free callers (their jit cache may carry the fault)
            ("faults", faults.plan_token()))
+    builder = False
     with _SOLVER_CACHE_LOCK:
         s = _SOLVER_CACHE.get(key)
         if s is not None:
             _SOLVER_CACHE.move_to_end(key)
             _SOLVER_CACHE_STATS["hits"] += 1
             return s
-        _SOLVER_CACHE_STATS["misses"] += 1
-    if mesh is not None:
-        from repro.distributed.pencil import DistributedPoissonSolver
-        s = DistributedPoissonSolver(shape, L, bcs, layout, green_kind,
-                                     mesh=mesh, eps_factor=eps_factor,
-                                     engine=engine, doubling=doubling,
-                                     relayout=relayout,
-                                     order_policy=order_policy, **kw)
-    else:
-        assert set(kw) <= {"verify", "verify_rtol"}, \
-            f"unexpected single-process solver kwargs: {kw}"
-        s = PoissonSolver(shape, L, bcs, layout, green_kind, eps_factor,
-                          engine=engine, doubling=doubling,
-                          relayout=relayout, order_policy=order_policy,
-                          **kw)
+        build = _SOLVER_BUILDS.get(key)
+        if build is None:
+            build = _SOLVER_BUILDS[key] = _SolverBuild()
+            _SOLVER_CACHE_STATS["misses"] += 1
+            builder = True
+        else:
+            # another thread is already constructing this key: park on its
+            # build instead of duplicating the plan/autotune/jit work
+            _SOLVER_CACHE_STATS["coalesced"] += 1
+    if not builder:
+        build.done.wait()
+        if build.exc is not None:
+            raise build.exc
+        return build.result
+    try:
+        if mesh is not None:
+            from repro.distributed.pencil import DistributedPoissonSolver
+            s = DistributedPoissonSolver(shape, L, bcs, layout, green_kind,
+                                         mesh=mesh, eps_factor=eps_factor,
+                                         engine=engine, doubling=doubling,
+                                         relayout=relayout,
+                                         order_policy=order_policy, **kw)
+        else:
+            assert set(kw) <= {"verify", "verify_rtol"}, \
+                f"unexpected single-process solver kwargs: {kw}"
+            s = PoissonSolver(shape, L, bcs, layout, green_kind, eps_factor,
+                              engine=engine, doubling=doubling,
+                              relayout=relayout, order_policy=order_policy,
+                              **kw)
+    except BaseException as e:
+        with _SOLVER_CACHE_LOCK:
+            _SOLVER_BUILDS.pop(key, None)
+            _SOLVER_CACHE_STATS["build_failures"] += 1
+        build.exc = e
+        build.done.set()
+        raise
     with _SOLVER_CACHE_LOCK:
         _SOLVER_CACHE[key] = s
         _SOLVER_CACHE.move_to_end(key)
         while len(_SOLVER_CACHE) > _SOLVER_CACHE_CAPACITY:
             _SOLVER_CACHE.popitem(last=False)
             _SOLVER_CACHE_STATS["evictions"] += 1
+        _SOLVER_BUILDS.pop(key, None)
+    build.result = s
+    build.done.set()
     return s
 
 
 def clear_solver_cache():
+    """Drop every cached solver and reset cache stats.  Also resets the
+    process-wide warn-once state (``comm`` + ``resilience`` diagnostics):
+    a fresh cache means fresh plans, and their one-shot warnings must be
+    able to fire again -- long-lived servers and test fixtures both call
+    this as THE runtime reset hook."""
     with _SOLVER_CACHE_LOCK:
         _SOLVER_CACHE.clear()
         for k in _SOLVER_CACHE_STATS:
             _SOLVER_CACHE_STATS[k] = 0
+    from . import comm as _comm
+    from repro.runtime import resilience as _resilience
+    _comm.reset_warn_once()
+    _resilience.reset_warn_once()
+
+
+def evict_solver_instance(solver) -> int:
+    """Drop the cache entries holding exactly ``solver`` (identity, not
+    equality).  The serve warm pool calls this when its memory budget
+    evicts a plan, so the global LRU cannot keep the Green's function and
+    jit executables alive behind the pool's back.  Returns the eviction
+    count."""
+    with _SOLVER_CACHE_LOCK:
+        stale = [k for k, v in _SOLVER_CACHE.items() if v is solver]
+        for k in stale:
+            del _SOLVER_CACHE[k]
+            _SOLVER_CACHE_STATS["evictions"] += 1
+    return len(stale)
 
 
 def evict_solver_entries(mesh) -> int:

@@ -44,14 +44,14 @@ def run_cell(arch, shape_name, mesh, comm, record_hlo=False, remat=None,
     n_chips = 1
     for v in mesh.shape.values():
         n_chips *= v
-    t0 = time.time()
+    t0 = time.perf_counter()
     cell = build_cell(arch, shape_name, mesh, comm=comm, remat=remat,
                       extra_cfg=extra_cfg)
     with jax.sharding.set_mesh(mesh):
         lowered = cell.fn.lower(*cell.args)
-        t_lower = time.time() - t0
+        t_lower = time.perf_counter() - t0
         compiled = lowered.compile()
-        t_compile = time.time() - t0 - t_lower
+        t_compile = time.perf_counter() - t0 - t_lower
 
     rec = dict(cell.meta)
     rec.update({"comm": comm.strategy, "n_chips": n_chips,

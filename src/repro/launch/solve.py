@@ -127,7 +127,7 @@ def main(argv=None):
 
     u = solver.solve(rhs)          # compile + warm
     u.block_until_ready()
-    t0 = time.time()
+    t0 = time.perf_counter()
     for step in range(max(args.repeats, args.steps)):
         # CFD-driver shape: every step re-acquires the (cached) solver
         solver = get_solver(
@@ -137,7 +137,7 @@ def main(argv=None):
         u = solver.solve(rhs)
         u.block_until_ready()
     reps = max(args.repeats, args.steps)
-    dt = (time.time() - t0) / reps
+    dt = (time.perf_counter() - t0) / reps
     u0 = np.asarray(u[0] if args.batch > 1 else u)
     err = float(np.max(np.abs(u0 - sol)))
     thr = rhs.size * 8 / dt / 1e6 / n_dev

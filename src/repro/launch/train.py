@@ -67,11 +67,11 @@ def main(argv=None):
     step_fn = jax.jit(train_step_fn(cfg, adam=adam, comm=comm))
     times = []
     for step in range(start, args.steps):
-        t0 = time.time()
+        t0 = time.perf_counter()
         batch = synthetic_batch(cfg, step, args.batch, args.seq)
         state, metrics = step_fn(state, batch)
         jax.block_until_ready(metrics["loss"])
-        dt = time.time() - t0
+        dt = time.perf_counter() - t0
         times.append(dt)
         med = float(np.median(times[-20:]))
         if len(times) > 5 and dt > 3.0 * med:

@@ -26,7 +26,7 @@ import warnings
 from dataclasses import dataclass
 
 __all__ = ["SolveError", "RetryPolicy", "LADDER", "next_rung",
-           "is_transient", "run_with_ladder"]
+           "is_transient", "run_with_ladder", "reset_warn_once"]
 
 
 # knob -> (from, to) downgrades, walked in priority order; one downgrade
@@ -98,6 +98,13 @@ def _warn_once(msg: str):
     if msg not in _WARNED:
         _WARNED.add(msg)
         warnings.warn(msg, RuntimeWarning, stacklevel=3)
+
+
+def reset_warn_once():
+    """Re-arm the one-shot degradation warnings (see
+    ``comm.reset_warn_once`` -- same long-lived-process rationale).
+    Called from ``solver.clear_solver_cache`` and the test fixtures."""
+    _WARNED.clear()
 
 
 def run_with_ladder(attempt, *, config: dict, reconfigure, stats: dict,

@@ -7,5 +7,23 @@
   distributed tests spawn subprocesses with XLA_FLAGS themselves.
 """
 import jax
+import pytest
 
 jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(autouse=True)
+def _reset_warn_once_state():
+    """Re-arm the process-wide warn-once diagnostics around every test.
+
+    ``comm`` and ``resilience`` deduplicate their warnings in module-global
+    sets; without this reset a test asserting on a warning would pass or
+    fail depending on which test warned first (execution order), and a
+    ``pytest.warns`` block could see nothing at all."""
+    from repro.core import comm
+    from repro.runtime import resilience
+    comm.reset_warn_once()
+    resilience.reset_warn_once()
+    yield
+    comm.reset_warn_once()
+    resilience.reset_warn_once()

@@ -194,3 +194,94 @@ def test_plan_cache_solver_still_correct(fresh_cache):
                                np.asarray(fresh.solve(f)),
                                rtol=1e-13, atol=1e-13)
     assert s_cached is s_cached2
+
+
+# ---------------------------------------------------------------------------
+# single-flight construction (the serve thundering herd)
+# ---------------------------------------------------------------------------
+
+def test_single_flight_one_construction_per_key(fresh_cache, monkeypatch):
+    """16 threads missing the same key concurrently must construct the
+    solver exactly ONCE (the others park on the builder and receive the
+    same instance); before the single-flight fix the miss path built
+    outside the lock, so every thread paid plan+autotune+jit and the last
+    insert silently overwrote its 15 siblings."""
+    import threading
+
+    built = []
+    build_gate = threading.Barrier(16, timeout=60)
+    real = sv.PoissonSolver
+
+    class Counting(real):
+        def __init__(self, *a, **kw):
+            built.append(threading.get_ident())
+            super().__init__(*a, **kw)
+
+    monkeypatch.setattr(sv, "PoissonSolver", Counting)
+    bcs = ((E, E), (O, E), (P, P))
+    out, errors = [], []
+
+    def worker():
+        try:
+            build_gate.wait()               # maximize miss concurrency
+            out.append(get_solver((8, 8, 8), 1.0, bcs))
+        except Exception as e:  # noqa: BLE001 -- surfaced by the assert
+            errors.append(e)
+
+    threads = [threading.Thread(target=worker) for _ in range(16)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert len(built) == 1, f"{len(built)} constructions for one key"
+    assert len(out) == 16 and all(s is out[0] for s in out)
+    info = solver_cache_info()
+    assert info["misses"] == 1
+    # a thread that arrives while the build is in flight parks (coalesced);
+    # one that arrives after it landed is a plain hit -- either way no
+    # second construction happened
+    assert info["coalesced"] + info["hits"] == 15
+
+
+def test_single_flight_failed_build_reraises_everywhere(fresh_cache,
+                                                        monkeypatch):
+    """A failed construction must re-raise in the builder AND every parked
+    waiter, and leave no cache entry (the next call retries cleanly)."""
+    import threading
+
+    calls = []
+    real = sv.PoissonSolver
+
+    class Flaky(real):
+        def __init__(self, *a, **kw):
+            calls.append(1)
+            if len(calls) == 1:
+                raise RuntimeError("flaky plan-time failure")
+            super().__init__(*a, **kw)
+
+    monkeypatch.setattr(sv, "PoissonSolver", Flaky)
+    bcs = ((E, E), (E, E), (E, E))
+    gate = threading.Barrier(4, timeout=60)
+    failures = []
+
+    def worker():
+        gate.wait()
+        try:
+            get_solver((8, 8, 8), 1.0, bcs)
+        except RuntimeError:
+            failures.append(1)
+
+    threads = [threading.Thread(target=worker) for _ in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # exactly one attempt ran (single-flight), and every thread that
+    # joined that build saw its failure; late arrivals may have retried
+    # and succeeded -- both outcomes are valid, the cache must just not
+    # hold a broken entry
+    assert failures, "no thread observed the injected build failure"
+    assert solver_cache_info()["build_failures"] == 1
+    s = get_solver((8, 8, 8), 1.0, bcs)    # clean retry after the failure
+    assert s is get_solver((8, 8, 8), 1.0, bcs)
