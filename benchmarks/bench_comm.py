@@ -5,6 +5,13 @@ autotuner pick.  The full sweep lands in ``BENCH_comm.json`` (the table
 rendered in EXPERIMENTS.md §Comm strategies).
 
 Runs in a subprocess with 8 host devices so the main process keeps 1.
+
+``--search`` (DESIGN.md #12) runs the guided-vs-brute A/B instead: the
+exhaustive comm sweep and the cost-model shortlist are timed over one
+memoized timer, the two winners are re-timed head-to-head, and the
+``search`` section of ``BENCH_comm.json`` records the account.  With
+``--check`` it gates (CI perf-guard): the guided winner must stay within
+10% of the brute winner while wall-clock timing >= 5x fewer candidates.
 """
 from __future__ import annotations
 
@@ -95,6 +102,109 @@ def run(quick=True):
             for r in rows]
 
 
+_SEARCH_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, sys, time
+import jax, jax.numpy as jnp
+from repro.core.bc import BCType, DataLayout
+from repro.core.comm import autotune_candidates, cfg_label
+from repro.distributed.pencil import DistributedPoissonSolver
+from repro.plan.search import guided_comm_candidates
+
+n = int(os.environ.get("BENCH_N", "48"))
+reps = int(os.environ.get("BENCH_REPS", "3"))
+P = (BCType.PER, BCType.PER)
+p1, p2 = 2, 4
+mesh = jax.make_mesh((p1, p2), ("data", "model"))
+ds = DistributedPoissonSolver((n, n, n), 1.0, (P, P, P),
+                              layout=DataLayout.CELL, mesh=mesh,
+                              dtype=jnp.float32)
+time_cfg = ds.comm_time_fn(reps=reps)
+brute = autotune_candidates(4, folds=("pack", "unpack"))
+census = {}
+guided = guided_comm_candidates(ds.plan, p1, p2, ds.dtype,
+                                folds=("pack", "unpack"),
+                                relayout=ds.relayout, census=census)
+memo = {}
+def timed(cfg):
+    lbl = cfg_label(cfg)
+    if lbl not in memo:
+        memo[lbl] = time_cfg(cfg)
+    return memo[lbl]
+bt = {cfg_label(c): timed(c) for c in brute}
+gt = {cfg_label(c): timed(c) for c in guided}
+bw, gw = min(bt, key=bt.get), min(gt, key=gt.get)
+if bw == gw:
+    ratio = 1.0
+else:
+    # interleaved head-to-head re-timing of the two winners only
+    by = {cfg_label(c): c for c in brute}
+    tb = tg = float("inf")
+    for _ in range(5):
+        tb = min(tb, time_cfg(by[bw]))
+        tg = min(tg, time_cfg(by[gw]))
+    ratio = tg / tb
+out = {"grid": n, "mesh": [p1, p2], "bcs": "per",
+       "space": census["space"],
+       "timed_brute": len(bt), "timed_guided": len(gt),
+       "pruned_padding": census["pruned_padding"],
+       "shortlist": census["shortlist"],
+       "predicted_us": {k: v * 1e6 for k, v in census["predicted"].items()},
+       "brute_us": {k: v * 1e6 for k, v in bt.items()},
+       "guided_us": {k: v * 1e6 for k, v in gt.items()},
+       "brute_winner": bw, "guided_winner": gw, "ratio": ratio}
+print("BENCH_JSON " + json.dumps(out))
+"""
+
+
+def run_search(n=48, reps=3, check=False):
+    """Guided-vs-brute A/B; merged into BENCH_comm.json under "search"."""
+    env = dict(os.environ, PYTHONPATH="src", BENCH_N=str(n),
+               BENCH_REPS=str(reps))
+    env.pop("XLA_FLAGS", None)
+    env.pop("REPRO_COMM_CACHE", None)  # both sweeps must run live
+    out = subprocess.run([sys.executable, "-c", _SEARCH_SCRIPT],
+                         capture_output=True, text=True, env=env,
+                         cwd=os.path.dirname(os.path.dirname(
+                             os.path.abspath(__file__))))
+    if out.returncode != 0:
+        raise RuntimeError(out.stderr[-2000:])
+    line = [l for l in out.stdout.splitlines()
+            if l.startswith("BENCH_JSON ")][-1]
+    res = json.loads(line[len("BENCH_JSON "):])
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    path = os.path.join(root, "BENCH_comm.json")
+    try:
+        with open(path) as fh:
+            payload = json.load(fh)
+    except (OSError, ValueError):
+        payload = {}
+    payload["search"] = res
+    with open(path, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"[search] n={res['grid']}^3 mesh={tuple(res['mesh'])}: "
+          f"brute={res['brute_winner']} "
+          f"({res['brute_us'][res['brute_winner']]:.0f}us, "
+          f"{res['timed_brute']} timed) vs "
+          f"guided={res['guided_winner']} "
+          f"({res['guided_us'][res['guided_winner']]:.0f}us, "
+          f"{res['timed_guided']} timed), ratio={res['ratio']:.3f}")
+    if check:
+        assert res["ratio"] <= 1.10, (
+            f"guided winner {res['guided_winner']} is {res['ratio']:.2f}x "
+            f"the brute winner {res['brute_winner']} (> 1.10)")
+        assert res["timed_brute"] >= 5 * res["timed_guided"], (
+            f"guided timed {res['timed_guided']} of {res['timed_brute']} "
+            "-- less than the gated 5x reduction")
+        print("[search] gates passed: ratio <= 1.10, >= 5x fewer timed")
+    return res
+
+
 if __name__ == "__main__":
-    from common import emit
-    emit(run(quick="--full" not in sys.argv))
+    if "--search" in sys.argv:
+        run_search(n=96 if "--full" in sys.argv else 48,
+                   check="--check" in sys.argv)
+    else:
+        from common import emit
+        emit(run(quick="--full" not in sys.argv))

@@ -37,6 +37,11 @@ class PoissonArchConfig:
     # persists them as JSON so later processes skip the timing sweep
     comm_autotune_cache: str = ""
     comm_autotune_max_chunks: int = 4   # sweep n_chunks in {2, 4, ...}
+    # comm="auto" candidate policy (DESIGN.md #12): "guided" ranks the
+    # candidate space with the analytic cost model and wall-clock times
+    # only the shortlisted frontier (~1/6 of the space); "brute" sweeps
+    # every candidate (the oracle reference the guided mode is gated on)
+    comm_autotune_search: str = "guided"
     # per-candidate wall-clock budget for the comm="auto" sweep, seconds
     # (0 = unlimited, or $REPRO_COMM_BUDGET); one pathological candidate
     # must never stall plan construction -- it is skipped and recorded in

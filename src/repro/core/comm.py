@@ -53,15 +53,23 @@ from repro.runtime import faults as _faults
 STRATEGIES = ("a2a", "pipelined", "fused", "overlap")
 
 __all__ = [
-    "STRATEGIES", "FOLDS", "CommConfig", "CommStrategy", "as_comm",
-    "make_strategy",
+    "STRATEGIES", "FOLDS", "CHUNK_AXES", "CACHE_SCHEMA",
+    "CommConfig", "CommStrategy", "as_comm",
+    "make_strategy", "cfg_label", "label_to_cfg",
     "topology_switch", "pad_axis", "crop_axis",
     "autotune_comm", "autotune_candidates",
+    "cache_load_entries", "cache_store_entry",
     "clear_autotune_cache", "all_reduce_mean", "reset_warn_once",
 ]
 
 
 FOLDS = ("pack", "unpack")
+# chunk-axis policy of the chunked strategies: "auto" honors the caller's
+# preferred free axis (the in-block multi-RHS batch) when it divides
+# n_chunks, "grid" always cuts the uninvolved grid axis -- a searchable
+# trade (batch chunking never pads; grid chunking keeps per-chunk rows
+# contiguous for the neighboring transforms)
+CHUNK_AXES = ("auto", "grid")
 
 
 @dataclass(frozen=True)
@@ -77,11 +85,37 @@ class CommConfig:
     # sweeps both for layout-scheduled plans.  Ignored by the baseline
     # (moveaxis) pipelines and by ``permute=None`` call sites.
     fold: str = "pack"
+    chunk_axis: str = "auto"   # see CHUNK_AXES
 
     def __post_init__(self):
         assert self.strategy in STRATEGIES, self.strategy
         assert self.n_chunks >= 1, self.n_chunks
         assert self.fold in FOLDS, self.fold
+        assert self.chunk_axis in CHUNK_AXES, self.chunk_axis
+
+
+def cfg_label(cfg: CommConfig) -> str:
+    """Canonical candidate label: ``strategy:n_chunks`` plus non-default
+    knobs (``:unpack``, ``:ca=grid``).  Stable across releases -- labels
+    are cache-key material (the candidate grid is part of the autotune
+    identity) and census/diagnostic keys."""
+    lbl = f"{cfg.strategy}:{cfg.n_chunks}"
+    if cfg.fold != "pack":
+        lbl += f":{cfg.fold}"
+    if cfg.chunk_axis != "auto":
+        lbl += f":ca={cfg.chunk_axis}"
+    return lbl
+
+
+def label_to_cfg(label: str) -> CommConfig:
+    parts = label.split(":")
+    fold, ca = "pack", "auto"
+    for p in parts[2:]:
+        if p.startswith("ca="):
+            ca = p[3:]
+        elif p in FOLDS:
+            fold = p
+    return CommConfig(parts[0], int(parts[1]), fold, ca)
 
 
 def as_comm(comm) -> CommConfig:
@@ -416,6 +450,14 @@ def clear_autotune_cache():
         _AUTOTUNE_CACHE.clear()
 
 
+# on-disk JSON layout: {"schema": CACHE_SCHEMA, "entries": {key: entry}}.
+# Schema 1 (the seed through PR 7) was the flat {key: entry} dict with no
+# version field and no ``fold`` in early entries; it is migrated in memory
+# on load (warned ONCE per file, counted in ``census["migrated"]``) and
+# rewritten as the current schema on the next store.
+CACHE_SCHEMA = 2
+
+
 def _cache_file_load(path: str) -> dict:
     try:
         with open(path) as fh:
@@ -438,33 +480,66 @@ def _cache_file_load(path: str) -> dict:
     return _faults.mangle_cache_entry(data)
 
 
+def cache_load_entries(path: str, census=None) -> dict:
+    """Load the cache file and return its ENTRIES dict, migrating legacy
+    (schema-1, flat) files in memory.  ``census["migrated"]`` counts the
+    entries carried across a migration (0 on a current-schema file)."""
+    data = _cache_file_load(path)
+    if census is not None:
+        census.setdefault("migrated", 0)
+    if not data:
+        return {}
+    if "schema" in data or "entries" in data:
+        entries = data.get("entries")
+        if data.get("schema") == CACHE_SCHEMA and isinstance(entries, dict):
+            return entries
+        _warn_once(f"comm: autotune cache {path} has unsupported schema "
+                   f"{data.get('schema')!r}; ignoring it (a live sweep "
+                   "will rewrite it)")
+        return {}
+    # legacy schema-1 flat file: every value that looks like an entry is
+    # carried over; pre-fold entries pick up the historical default
+    entries = {}
+    for k, v in data.items():
+        if isinstance(v, dict):
+            e = dict(v)
+            if "strategy" in e:
+                e.setdefault("fold", "pack")
+            entries[k] = e
+    if entries:
+        _warn_once(f"comm: autotune cache {path} uses the legacy flat "
+                   f"schema; migrated {len(entries)} entries in memory "
+                   f"(rewritten as schema {CACHE_SCHEMA} on the next "
+                   "store)")
+    if census is not None:
+        census["migrated"] += len(entries)
+    return entries
+
+
 _CACHE_FILE_LOCK = threading.Lock()
 
 
-def _cache_file_store(path: str, key: str, cfg: CommConfig, timings: dict,
-                      skipped=()):
-    """Read-merge-write one winner into the JSON cache, atomically.
+def cache_store_entry(path: str, key: str, entry: dict):
+    """Read-merge-write one entry into the schema-versioned JSON cache,
+    atomically.
 
     Concurrent server workers (threads in this process via the lock,
     sibling processes via tmp+``os.replace``) never interleave partial
     writes: a reader sees either the old file or the new one, complete --
     a crash mid-store leaves at worst a stray ``*.tmp.<pid>`` file, never
-    a truncated cache that breaks the next startup's ``json.load``."""
+    a truncated cache that breaks the next startup's ``json.load``.
+    Storing into a legacy flat file migrates it to the current schema."""
     with _CACHE_FILE_LOCK:
-        data = _cache_file_load(path)
-        data[key] = {"strategy": cfg.strategy, "n_chunks": cfg.n_chunks,
-                     "fold": cfg.fold,
-                     "timings_us": {k: round(v * 1e6, 1)
-                                    for k, v in timings.items()}}
-        if skipped:                 # budget-abandoned candidates, on record
-            data[key]["skipped_budget"] = list(skipped)
+        entries = cache_load_entries(path)
+        entries[key] = entry
         tmp = f"{path}.tmp.{os.getpid()}"
         try:
             d = os.path.dirname(path)
             if d:
                 os.makedirs(d, exist_ok=True)
             with open(tmp, "w") as fh:
-                json.dump(data, fh, indent=1, sort_keys=True)
+                json.dump({"schema": CACHE_SCHEMA, "entries": entries},
+                          fh, indent=1, sort_keys=True)
             os.replace(tmp, path)   # atomic commit (same filesystem)
         except OSError as e:        # cache is best-effort, never fatal
             _warn_once(f"comm: cannot persist autotune cache to {path}: {e}")
@@ -472,6 +547,19 @@ def _cache_file_store(path: str, key: str, cfg: CommConfig, timings: dict,
                 os.unlink(tmp)
             except OSError:
                 pass
+
+
+def _cache_file_store(path: str, key: str, cfg: CommConfig, timings: dict,
+                      skipped=()):
+    entry = {"strategy": cfg.strategy, "n_chunks": cfg.n_chunks,
+             "fold": cfg.fold,
+             "timings_us": {k: round(v * 1e6, 1)
+                            for k, v in timings.items()}}
+    if cfg.chunk_axis != "auto":
+        entry["chunk_axis"] = cfg.chunk_axis
+    if skipped:                     # budget-abandoned candidates, on record
+        entry["skipped_budget"] = list(skipped)
+    cache_store_entry(path, key, entry)
 
 
 def _timed_call(fn, arg, budget_s):
@@ -511,8 +599,9 @@ def autotune_comm(key, time_fn, candidates=None, cache_path=None,
     timing within it is skipped (warned once) so ONE pathological
     (strategy, n_chunks, fold) pair cannot stall plan construction.
     ``census``, when a dict, records the sweep's full account:
-    ``timed`` (label -> seconds), ``failed`` (label -> error) and
-    ``skipped_budget`` (labels abandoned on budget).
+    ``timed`` (label -> seconds), ``failed`` (label -> error),
+    ``skipped_budget`` (labels abandoned on budget) and ``migrated``
+    (entries carried across a legacy cache-schema migration).
     """
     if candidates is None:
         candidates = autotune_candidates()
@@ -522,12 +611,10 @@ def autotune_comm(key, time_fn, candidates=None, cache_path=None,
         except ValueError:
             budget_s = 0
     # the candidate grid is part of the identity: widening the sweep (e.g.
-    # raising comm_autotune_max_chunks or adding fold sides) must
-    # invalidate the cached winner
-    labels = tuple(
-        f"{c.strategy}:{c.n_chunks}" + ("" if c.fold == "pack"
-                                        else f":{c.fold}")
-        for c in candidates)
+    # raising comm_autotune_max_chunks, adding fold sides, or a guided
+    # search shortlisting a different frontier) must invalidate the cached
+    # winner
+    labels = tuple(cfg_label(c) for c in candidates)
     key = repr((key, labels))
     if cache_path is None:
         cache_path = os.environ.get("REPRO_COMM_CACHE") or None
@@ -536,11 +623,12 @@ def autotune_comm(key, time_fn, candidates=None, cache_path=None,
     if hit is not None:
         return hit
     if cache_path:
-        entry = _cache_file_load(cache_path).get(key)
+        entry = cache_load_entries(cache_path, census=census).get(key)
         if entry is not None:
             try:
                 cfg = CommConfig(entry["strategy"], int(entry["n_chunks"]),
-                                 str(entry.get("fold", "pack")))
+                                 str(entry.get("fold", "pack")),
+                                 str(entry.get("chunk_axis", "auto")))
             except (KeyError, TypeError, ValueError, AssertionError):
                 # malformed / older-schema entry: fall through to a live
                 # sweep (the cache is best-effort, never fatal)
@@ -573,9 +661,7 @@ def autotune_comm(key, time_fn, candidates=None, cache_path=None,
     if not timings:
         return CommConfig()
     best_label = min(timings, key=timings.get)
-    parts = best_label.split(":")
-    best = CommConfig(parts[0], int(parts[1]),
-                      parts[2] if len(parts) > 2 else "pack")
+    best = label_to_cfg(best_label)
     with _AUTOTUNE_LOCK:
         _AUTOTUNE_CACHE[key] = best
     if cache_path:

@@ -70,15 +70,23 @@ class TransformEngine:
 
     ``interpret``: run Pallas kernels in interpret mode (CPU validation);
     on a real TPU runtime pass ``interpret=False`` to lower to Mosaic.
+    ``max_radix``: Stockham FFT radix cap (4 = mixed radix-4/2, the
+    default; 2 = pure radix-2, twice the stages at half the per-stage
+    arithmetic) -- a plan-space search dimension (DESIGN.md #12); only
+    the Pallas kernels consume it, the XLA engine ignores it.
     """
 
     name: str = "xla"
     interpret: bool = True
+    max_radix: int = 4
 
     def __post_init__(self):
         if self.name not in ENGINES:
             raise ValueError(
                 f"unknown engine {self.name!r}; expected one of {ENGINES}")
+        if self.max_radix not in (2, 4):
+            raise ValueError(f"max_radix must be 2 or 4, "
+                             f"got {self.max_radix!r}")
 
     @property
     def use_pallas(self) -> bool:
@@ -409,9 +417,11 @@ class TransformSchedule:
         assert green.shape[-1] == p.n_out, (green.shape, p.n_out)
         if p.dft == "r2c":
             return ops.rfft_green(x, green, interpret=self.engine.interpret,
-                                  pad_to=pad_to)
+                                  pad_to=pad_to,
+                                  max_radix=self.engine.max_radix)
         return ops.fft1d_green(x, green, interpret=self.engine.interpret,
-                               pad_to=pad_to)
+                               pad_to=pad_to,
+                               max_radix=self.engine.max_radix)
 
 
 def folded_normfact(plan) -> float:

@@ -71,14 +71,16 @@ def _scan_dtype(dtype):
 def _rfft(z, engine):
     if _use_pallas(engine) and _pow2(z.shape[-1]):
         from repro.kernels import ops
-        return ops.rfft_pallas(z, interpret=engine.interpret)
+        return ops.rfft_pallas(z, interpret=engine.interpret,
+                               max_radix=engine.max_radix)
     return jnp.fft.rfft(z, axis=-1)
 
 
 def _irfft(c, n, engine):
     if _use_pallas(engine) and _pow2(n):
         from repro.kernels import ops
-        return ops.irfft_pallas(c, n, interpret=engine.interpret)
+        return ops.irfft_pallas(c, n, interpret=engine.interpret,
+                                max_radix=engine.max_radix)
     return jnp.fft.irfft(c, n=n, axis=-1)
 
 
@@ -89,7 +91,8 @@ def _cfft(z, engine, inverse=False):
                      else jnp.complex64)
     if _use_pallas(engine) and _pow2(z.shape[-1]):
         from repro.kernels import ops
-        return ops.fft1d(z, inverse=inverse, interpret=engine.interpret)
+        return ops.fft1d(z, inverse=inverse, interpret=engine.interpret,
+                         max_radix=engine.max_radix)
     return (jnp.fft.ifft if inverse else jnp.fft.fft)(z, axis=-1)
 
 
@@ -115,7 +118,8 @@ def _rfft_padded(x, n_fft, engine):
         return _rfft(x, engine)
     if _use_pallas(engine) and _pow2(n_fft) and n_fft == 2 * n_in:
         from repro.kernels import ops
-        return ops.rfft_pallas(x, pad_to=n_fft, interpret=engine.interpret)
+        return ops.rfft_pallas(x, pad_to=n_fft, interpret=engine.interpret,
+                               max_radix=engine.max_radix)
     return _rfft(_zpad(x, n_fft), engine)
 
 
@@ -127,7 +131,8 @@ def _cfft_padded(z, n_fft, engine):
     if (_use_pallas(engine) and _pow2(n_fft) and n_fft == 2 * n_in
             and jnp.iscomplexobj(z)):
         from repro.kernels import ops
-        return ops.fft1d(z, pad_to=n_fft, interpret=engine.interpret)
+        return ops.fft1d(z, pad_to=n_fft, interpret=engine.interpret,
+                         max_radix=engine.max_radix)
     return _cfft(_zpad(z, n_fft), engine)
 
 
@@ -140,7 +145,8 @@ def _irfft_crop(y, n_fft, keep, engine):
     if (_use_pallas(engine) and _pow2(n_fft) and n_fft >= 4
             and keep <= n_fft // 2):
         from repro.kernels import ops
-        return ops.irfft_pruned(y, n_fft, keep, interpret=engine.interpret)
+        return ops.irfft_pruned(y, n_fft, keep, interpret=engine.interpret,
+                                max_radix=engine.max_radix)
     return _irfft(y, n_fft, engine)[..., :keep]
 
 
@@ -152,7 +158,8 @@ def _icfft_crop(z, keep, engine):
     if (_use_pallas(engine) and _pow2(n_fft) and n_fft >= 4
             and keep <= n_fft // 2):
         from repro.kernels import ops
-        return ops.ifft_pruned(z, keep, interpret=engine.interpret)
+        return ops.ifft_pruned(z, keep, interpret=engine.interpret,
+                               max_radix=engine.max_radix)
     return _cfft(z, engine, inverse=True)[..., :keep]
 
 
@@ -238,7 +245,8 @@ def _rfft_twiddle_fused(z, a, b, start, count, engine, out_dtype):
         return None
     from repro.kernels import ops
     return ops.rfft_twiddle(z, a[:count], b[:count], start=start,
-                            interpret=engine.interpret).astype(out_dtype)
+                            interpret=engine.interpret,
+                            max_radix=engine.max_radix).astype(out_dtype)
 
 
 def dct1(x, engine=None, tables=None):

@@ -107,9 +107,11 @@ class DistributedPoissonSolver:
                  order_policy: str = "layout",
                  autotune_candidates=None, autotune_cache=None,
                  autotune_batch=None, autotune_budget=None,
+                 autotune_search: str = "guided",
                  verify=None, verify_rtol=0.5, _green_cache=None):
         assert relayout in RELAYOUT_MODES, relayout
         assert verify in (None, "nan", "residual"), verify
+        assert autotune_search in ("guided", "brute"), autotune_search
         # full construction identity, kept for _configure (ladder rebuilds)
         # and rebuild(mesh) (elastic recovery re-plans)
         self._ctor = dict(shape=tuple(shape), L=L, bcs=bcs, layout=layout,
@@ -117,10 +119,12 @@ class DistributedPoissonSolver:
                           batch_axis=batch_axis, eps_factor=eps_factor,
                           dtype=dtype, lazy_green=lazy_green,
                           order_policy=order_policy, comm_req=comm,
+                          engine_obj=as_engine(engine),
                           autotune_candidates=autotune_candidates,
                           autotune_cache=autotune_cache,
                           autotune_batch=autotune_batch,
-                          autotune_budget=autotune_budget)
+                          autotune_budget=autotune_budget,
+                          autotune_search=autotune_search)
         self.verify = verify
         self.verify_rtol = float(verify_rtol)
         self.stats = {"solves": 0, "retries": 0, "verify_failures": 0,
@@ -152,7 +156,12 @@ class DistributedPoissonSolver:
         self.plan = make_plan(shape, L, bcs, layout, green_kind, eps_factor,
                               doubling=cfg["doubling"],
                               order_policy=order_policy)
-        self.engine = as_engine(cfg["engine"])
+        # keep the constructor's engine OBJECT (it may carry a non-default
+        # max_radix) as long as the ladder has not degraded the engine name
+        base_eng = c.get("engine_obj")
+        self.engine = (base_eng if base_eng is not None
+                       and base_eng.name == cfg["engine"]
+                       else as_engine(cfg["engine"]))
         self.schedule = build_schedule(self.plan, self.engine)
         self.relayout = cfg["relayout"]
         e = self.plan.order
@@ -221,7 +230,8 @@ class DistributedPoissonSolver:
             prev = getattr(self, "comm", None) or CommConfig()
             nc = prev.n_chunks if cfg["comm"] in ("pipelined", "overlap") \
                 else 1
-            self.comm = CommConfig(cfg["comm"], max(nc, 1), prev.fold)
+            self.comm = CommConfig(cfg["comm"], max(nc, 1), prev.fold,
+                                   prev.chunk_axis)
         self._green_dev = None
         self._jits = {}
         self._jit = self.jit_for(local_batch=False)
@@ -235,9 +245,10 @@ class DistributedPoissonSolver:
         U, S = self._U, self._S
         strat = make_strategy(cfg, axis_sizes=self._axis_sizes)
         # leading batch axes (multi-RHS) shift every grid-dim index; they
-        # are also the chunked strategies' preferred (free) chunk axis
+        # are also the chunked strategies' preferred (free) chunk axis --
+        # unless the config pins the uninvolved grid axis (chunk_axis="grid")
         off = x.ndim - len(self.plan.dirs)
-        ca = 0 if off else None
+        ca = 0 if off and cfg.chunk_axis == "auto" else None
         e0, e1, e2 = d0 + off, d1 + off, d2 + off
 
         # forward sweep: every switch carries the next direction's transform
@@ -290,7 +301,7 @@ class DistributedPoissonSolver:
         B0, B1, B2 = lay.bwd                 # B0 == L2 (spectral layout)
         strat = make_strategy(cfg, axis_sizes=self._axis_sizes)
         off = x.ndim - len(self.plan.dirs)
-        ca = 0 if off else None
+        ca = 0 if off and cfg.chunk_axis == "auto" else None
         nat = tuple(range(len(self.plan.dirs)))
         first, last = off, x.ndim - 1        # switch frame: split major,
                                              # gather minor (switch_layout)
@@ -399,13 +410,15 @@ class DistributedPoissonSolver:
         (the $REPRO_COMM_CACHE staleness guard, tested in test_comm.py).
         """
         dirs = self.plan.dirs
+        eng = self.engine.name + ("" if self.engine.max_radix == 4
+                                  else f"@r{self.engine.max_radix}")
         return (
             tuple(p.n for p in dirs),
             tuple((p.bc.left.name, p.bc.right.name) for p in dirs),
             dirs[0].layout.name,
             tuple((a, int(self.mesh.shape[a])) for a in self.mesh.axis_names),
             tuple(self.axes), self.batch_axis,
-            jnp.dtype(self.dtype).name, self.engine.name,
+            jnp.dtype(self.dtype).name, eng,
             ("doubling", self.plan.doubling),
             # the layout schedule changes what every candidate compiles to
             # (relayouts folded into the switches vs standalone moveaxis,
@@ -415,21 +428,15 @@ class DistributedPoissonSolver:
             ("order", self.plan.order),
         )
 
-    def _autotune(self, candidates, cache_path, batch=None,
-                  reps: int = 3, budget=None) -> CommConfig:
-        # timed workload must match the production rank: the pod-sharded
-        # batch (default: the pod mesh extent) when ``batch_axis`` is set,
-        # or the IN-BLOCK multi-RHS batch when the caller states it
-        # (``autotune_batch`` on a 2-axis mesh) -- otherwise the tuner
-        # would time the unbatched pipeline and could cache an n_chunks
-        # that does not divide B, silently losing the free batch-axis
-        # chunking in production.  The timed extent is part of the cache
-        # key, so differently-sized tunings never collide.
-        local_batch = False
-        if self.batch_axis is None:
-            local_batch = batch is not None
-        elif batch is None:
-            batch = self.mesh.shape[self.batch_axis]
+    def comm_time_fn(self, batch=None, reps: int = 3):
+        """``time_fn(cfg) -> seconds`` over THIS solver's plan/mesh: build
+        the jitted pipeline under one comm config, compile + warm, return
+        the best of ``reps`` wall-clock solves.  What the autotuner (and
+        the guided-vs-brute oracle tests / ``bench_comm.py --search``)
+        time candidates with.  ``batch`` follows ``_autotune``'s
+        convention: the pod-sharded extent when ``batch_axis`` is set,
+        else the in-block multi-RHS extent (None = unbatched)."""
+        local_batch = self.batch_axis is None and batch is not None
         fshape = self.padded_input_shape(batch)
         gsd = self._green_np
         in_spec = self.input_spec(local_batch)
@@ -453,13 +460,45 @@ class DistributedPoissonSolver:
                 best = min(best, time.perf_counter() - t0)
             return best
 
-        if candidates is None and self.relayout == "scheduled":
+        return time_cfg
+
+    def _autotune(self, candidates, cache_path, batch=None,
+                  reps: int = 3, budget=None) -> CommConfig:
+        # timed workload must match the production rank: the pod-sharded
+        # batch (default: the pod mesh extent) when ``batch_axis`` is set,
+        # or the IN-BLOCK multi-RHS batch when the caller states it
+        # (``autotune_batch`` on a 2-axis mesh) -- otherwise the tuner
+        # would time the unbatched pipeline and could cache an n_chunks
+        # that does not divide B, silently losing the free batch-axis
+        # chunking in production.  The timed extent is part of the cache
+        # key, so differently-sized tunings never collide.
+        if self.batch_axis is not None and batch is None:
+            batch = self.mesh.shape[self.batch_axis]
+        time_cfg = self.comm_time_fn(batch, reps=reps)
+        self.autotune_results = {}
+        self.autotune_census = {}
+        if candidates is None:
             # layout-scheduled plans also sweep the relayout fold side:
             # whether the switch-fused transpose is cheaper on the pack or
             # the unpack side of the collective is shape-dependent
-            candidates = _default_candidates(folds=("pack", "unpack"))
-        self.autotune_results = {}
-        self.autotune_census = {}
+            folds = (("pack", "unpack") if self.relayout == "scheduled"
+                     else ("pack",))
+            if self._ctor.get("autotune_search", "guided") == "guided":
+                # DESIGN.md #12: rank the comm sub-space with the analytic
+                # cost model and hand only the shortlisted frontier to the
+                # timer.  The shortlist labels are cache-key material, so
+                # a guided pick never shadows (or replays) a brute one.
+                from repro.plan.search import guided_comm_candidates
+                p1 = self.mesh.shape[self.axes[0]]
+                p2 = self.mesh.shape[self.axes[1]]
+                in_block = batch if self.batch_axis is None else None
+                candidates = guided_comm_candidates(
+                    self.plan, p1, p2, self.dtype, batch=in_block,
+                    folds=folds, relayout=self.relayout,
+                    max_radix=self.engine.max_radix,
+                    census=self.autotune_census)
+            else:
+                candidates = _default_candidates(folds=folds)
         key = self.autotune_key() + (("tuned_batch", batch),)
         return autotune_comm(key, time_cfg,
                              candidates=candidates, cache_path=cache_path,
@@ -580,13 +619,17 @@ class DistributedPoissonSolver:
             comm=comm if comm is not None else c["comm_req"],
             batch_axis=self.batch_axis, eps_factor=c["eps_factor"],
             dtype=self.dtype, lazy_green=c["lazy_green"],
-            engine=self._cfg["engine"], doubling=self._cfg["doubling"],
+            engine=(c["engine_obj"]
+                    if c["engine_obj"].name == self._cfg["engine"]
+                    else self._cfg["engine"]),
+            doubling=self._cfg["doubling"],
             relayout=self._cfg["relayout"],
             order_policy=c["order_policy"],
             autotune_candidates=c["autotune_candidates"],
             autotune_cache=c["autotune_cache"],
             autotune_batch=c["autotune_batch"],
             autotune_budget=c["autotune_budget"],
+            autotune_search=c.get("autotune_search", "guided"),
             verify=self.verify, verify_rtol=self.verify_rtol,
             _green_cache=self._green_raw)
         new.stats["degradations"] = list(self.stats["degradations"])

@@ -90,9 +90,10 @@ def dct2_post_twiddle(fhat_half, interpret: bool = True):
                         np.sin(np.pi * k / (2.0 * m)), interpret=interpret)
 
 
-@partial(jax.jit, static_argnames=("start", "interpret", "pad_to"))
+@partial(jax.jit, static_argnames=("start", "interpret", "pad_to",
+                                   "max_radix"))
 def rfft_twiddle(x, a, b, start: int = 0, interpret: bool = True,
-                 pad_to: int | None = None):
+                 pad_to: int | None = None, max_radix: int = 4):
     """Fused rfft + r2r post-twiddle: ``a * Re(F)[start:start+k] +
     b * Im(F)[start:start+k]`` of the real (..., N) array ``x`` in ONE
     Pallas kernel (the ``twiddle_pack`` pass runs in the FFT's final-stage
@@ -106,11 +107,13 @@ def rfft_twiddle(x, a, b, start: int = 0, interpret: bool = True,
     av = jnp.asarray(a, dtype=x.dtype)
     bv = jnp.asarray(b, dtype=x.dtype)
     y = fft_stockham_twiddle(re, im, av, bv, start=start,
-                             interpret=interpret, pad_to=pad_to)
+                             interpret=interpret, pad_to=pad_to,
+                             max_radix=max_radix)
     return y.reshape(shp[:-1] + (av.shape[-1],))
 
 
-def _fft_green(x, green2d, half: bool, interpret: bool, pad_to):
+def _fft_green(x, green2d, half: bool, interpret: bool, pad_to,
+               max_radix: int = 4):
     """Shared body of the fused forward-FFT x Green epilogues."""
     shp = x.shape
     n = shp[-1]
@@ -127,32 +130,35 @@ def _fft_green(x, green2d, half: bool, interpret: bool, pad_to):
     k = n_fft // 2 + 1 if half else n_fft
     g2 = green2d.reshape(-1, k).astype(rdt)
     orr, oi = fft_stockham_scale(re, im, g2, start=0, interpret=interpret,
-                                 pad_to=pad_to)
+                                 pad_to=pad_to, max_radix=max_radix)
     return (orr + 1j * oi).reshape(shp[:-1] + (k,)).astype(_cdt(rdt))
 
 
-@partial(jax.jit, static_argnames=("interpret", "pad_to"))
-def fft1d_green(x, green, interpret: bool = True, pad_to: int | None = None):
+@partial(jax.jit, static_argnames=("interpret", "pad_to", "max_radix"))
+def fft1d_green(x, green, interpret: bool = True, pad_to: int | None = None,
+                max_radix: int = 4):
     """Fused forward complex FFT x Green multiply: ``FFT(x) * green`` with
     ``green`` real of shape (..., n_fft) broadcast over any leading batch
     of ``x`` -- the last forward direction's ``spectral_scale`` pass runs
     in the FFT's final-stage registers."""
     return _fft_green(x, green, half=False, interpret=interpret,
-                      pad_to=pad_to)
+                      pad_to=pad_to, max_radix=max_radix)
 
 
-@partial(jax.jit, static_argnames=("interpret", "pad_to"))
-def rfft_green(x, green, interpret: bool = True, pad_to: int | None = None):
+@partial(jax.jit, static_argnames=("interpret", "pad_to", "max_radix"))
+def rfft_green(x, green, interpret: bool = True, pad_to: int | None = None,
+               max_radix: int = 4):
     """Fused rfft x Green multiply on the half spectrum: ``rfft(x) * green``
     with ``green`` real of shape (..., n_fft//2+1); ``pad_to = 2N`` prunes
     the Hockney zero tail inside the same kernel."""
     return _fft_green(x, green, half=True, interpret=interpret,
-                      pad_to=pad_to)
+                      pad_to=pad_to, max_radix=max_radix)
 
 
-@partial(jax.jit, static_argnames=("inverse", "interpret", "pad_to"))
+@partial(jax.jit, static_argnames=("inverse", "interpret", "pad_to",
+                                   "max_radix"))
 def fft1d(x, inverse: bool = False, interpret: bool = True,
-          pad_to: int | None = None):
+          pad_to: int | None = None, max_radix: int = 4):
     """Batched complex FFT via the Stockham kernel. x: (..., N) complex.
 
     ``pad_to = 2N`` is the PRUNED Hockney-doubling entry point: the
@@ -164,13 +170,14 @@ def fft1d(x, inverse: bool = False, interpret: bool = True,
     re = x.real.reshape(rows, shp[-1]).astype(rdt)
     im = x.imag.reshape(rows, shp[-1]).astype(rdt)
     orr, oi = fft_stockham(re, im, inverse=inverse, interpret=interpret,
-                           pad_to=pad_to)
+                           pad_to=pad_to, max_radix=max_radix)
     n_out = pad_to if pad_to is not None else shp[-1]
     return (orr + 1j * oi).reshape(shp[:-1] + (n_out,)).astype(_cdt(rdt))
 
 
-@partial(jax.jit, static_argnames=("interpret", "pad_to"))
-def rfft_pallas(x, interpret: bool = True, pad_to: int | None = None):
+@partial(jax.jit, static_argnames=("interpret", "pad_to", "max_radix"))
+def rfft_pallas(x, interpret: bool = True, pad_to: int | None = None,
+                max_radix: int = 4):
     """rfft of a real (..., N) array via the Stockham kernel: complex FFT
     with a zero imaginary plane, cropped to the half spectrum.  ``pad_to =
     2N`` prunes the Hockney zero tail (length-2N spectrum, N+1 bins kept,
@@ -180,14 +187,15 @@ def rfft_pallas(x, interpret: bool = True, pad_to: int | None = None):
     rows = _rows(shp)
     re = x.reshape(rows, n)
     im = jnp.zeros_like(re)
-    orr, oi = fft_stockham(re, im, interpret=interpret, pad_to=pad_to)
+    orr, oi = fft_stockham(re, im, interpret=interpret, pad_to=pad_to,
+                           max_radix=max_radix)
     half = (pad_to if pad_to is not None else n) // 2 + 1
     out = (orr[:, :half] + 1j * oi[:, :half]).astype(_cdt(x.dtype))
     return out.reshape(shp[:-1] + (half,))
 
 
-@partial(jax.jit, static_argnames=("keep", "interpret"))
-def ifft_pruned(y, keep: int, interpret: bool = True):
+@partial(jax.jit, static_argnames=("keep", "interpret", "max_radix"))
+def ifft_pruned(y, keep: int, interpret: bool = True, max_radix: int = 4):
     """First ``keep`` samples of the length-2n inverse FFT of ``y`` via the
     parity split: x_j = (ifft_n(Y_even)_j + e^{i pi j / n} ifft_n(Y_odd)_j)
     / 2 for j < n -- two half-length Stockham inverses instead of one
@@ -202,7 +210,8 @@ def ifft_pruned(y, keep: int, interpret: bool = True):
     halves = []
     for part in (y2[:, 0::2], y2[:, 1::2]):
         orr, oi = fft_stockham(part.real.astype(rdt), part.imag.astype(rdt),
-                               inverse=True, interpret=interpret)
+                               inverse=True, interpret=interpret,
+                               max_radix=max_radix)
         halves.append(orr + 1j * oi)
     j = jnp.arange(n, dtype=rdt)
     mod = jnp.exp(1j * jnp.pi * j / n).astype(_cdt(rdt))
@@ -210,8 +219,9 @@ def ifft_pruned(y, keep: int, interpret: bool = True):
     return out[:, :keep].reshape(shp[:-1] + (keep,)).astype(_cdt(rdt))
 
 
-@partial(jax.jit, static_argnames=("n", "keep", "interpret"))
-def irfft_pruned(y, n: int, keep: int, interpret: bool = True):
+@partial(jax.jit, static_argnames=("n", "keep", "interpret", "max_radix"))
+def irfft_pruned(y, n: int, keep: int, interpret: bool = True,
+                 max_radix: int = 4):
     """First ``keep`` samples of the length-``n`` irfft of a hermitian half
     spectrum (..., n//2+1): hermitian extension + parity-split pruned
     inverse, real part."""
@@ -220,13 +230,14 @@ def irfft_pruned(y, n: int, keep: int, interpret: bool = True):
     y2 = y.reshape(rows, shp[-1])
     tail = jnp.conj(y2[:, n - n // 2 - 1:0:-1])
     full = jnp.concatenate([y2, tail], axis=-1)
-    out = ifft_pruned(full, keep, interpret=interpret)
+    out = ifft_pruned(full, keep, interpret=interpret,
+                      max_radix=max_radix)
     rdt = jnp.float64 if y.dtype == jnp.complex128 else jnp.float32
     return out.real.reshape(shp[:-1] + (keep,)).astype(rdt)
 
 
-@partial(jax.jit, static_argnames=("n", "interpret"))
-def irfft_pallas(y, n: int, interpret: bool = True):
+@partial(jax.jit, static_argnames=("n", "interpret", "max_radix"))
+def irfft_pallas(y, n: int, interpret: bool = True, max_radix: int = 4):
     """irfft of a hermitian half spectrum (..., N//2+1) -> real (..., N)."""
     shp = y.shape
     rows = _rows(shp)
@@ -236,5 +247,6 @@ def irfft_pallas(y, n: int, interpret: bool = True):
     full = jnp.concatenate([y2, tail], axis=-1)
     rdt = jnp.float64 if y.dtype == jnp.complex128 else jnp.float32
     orr, _ = fft_stockham(full.real.astype(rdt), full.imag.astype(rdt),
-                          inverse=True, interpret=interpret)
+                          inverse=True, interpret=interpret,
+                          max_radix=max_radix)
     return orr.reshape(shp[:-1] + (n,)).astype(rdt)

@@ -193,10 +193,14 @@ def _build_poisson_cell(shape_name, mesh, comm):
         batch_axis="pod" if multi else None, lazy_green=True,
         engine=CONFIG.engine, doubling=CONFIG.doubling,
         relayout=CONFIG.relayout,
-        autotune_candidates=autotune_candidates(
+        # guided search derives its own predictor-ranked shortlist from the
+        # solver's plan; only brute mode pins the exhaustive candidate grid
+        autotune_search=CONFIG.comm_autotune_search,
+        autotune_candidates=(None if CONFIG.comm_autotune_search == "guided"
+                             else autotune_candidates(
             CONFIG.comm_autotune_max_chunks,
             folds=(("pack", "unpack") if CONFIG.relayout == "scheduled"
-                   else ("pack",))),
+                   else ("pack",)))),
         autotune_cache=CONFIG.comm_autotune_cache or None,
         autotune_budget=CONFIG.comm_autotune_budget_s or None,
         # comm="auto" must time the rank it will run: the in-block batch

@@ -54,6 +54,11 @@ def main(argv=None):
                          "elastic rebuild on injected device loss)")
     ap.add_argument("--ckpt-every", type=int, default=2,
                     help="checkpoint every k steps (with --ckpt)")
+    ap.add_argument("--search", default="guided",
+                    choices=["guided", "brute"],
+                    help="comm=auto candidate policy: guided (cost-model "
+                         "shortlist, times ~1/6 of the space) or brute "
+                         "(exhaustive sweep -- the oracle reference)")
     ap.add_argument("--verify", default=None,
                     choices=["nan", "residual"],
                     help="opt-in per-solve health guard (see runtime.health)")
@@ -89,10 +94,16 @@ def main(argv=None):
         (args.n,) * 3, 1.0, bcs, layout=layout, green_kind=args.green,
         mesh=mesh, comm=comm, dtype=jnp.float64,
         engine=args.engine, doubling=args.doubling,
-        relayout=args.relayout)
+        relayout=args.relayout, autotune_search=args.search)
     if args.comm == "auto":
         picked = (f"{solver.comm.strategy}"
                   f"(n_chunks={solver.comm.n_chunks})")
+        cen = solver.autotune_census
+        if args.search == "guided" and cen.get("shortlist") is not None:
+            print(f"[solve] guided search: {cen['space']} candidates -> "
+                  f"{len(cen['shortlist'])} timed "
+                  f"({len(cen.get('pruned_padding', []))} pruned on "
+                  "padding overhead)")
         if solver.autotune_results:
             print(f"[solve] comm=auto -> {picked}, candidates: " +
                   ", ".join(f"{k}={v*1e3:.1f}ms"
@@ -133,7 +144,8 @@ def main(argv=None):
         solver = get_solver(
             (args.n,) * 3, 1.0, bcs, layout=layout, green_kind=args.green,
             mesh=mesh, comm=comm, dtype=jnp.float64, engine=args.engine,
-            doubling=args.doubling, relayout=args.relayout)
+            doubling=args.doubling, relayout=args.relayout,
+            autotune_search=args.search)
         u = solver.solve(rhs)
         u.block_until_ready()
     reps = max(args.repeats, args.steps)

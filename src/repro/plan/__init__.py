@@ -1,0 +1,25 @@
+"""Declarative plan space + cost-model-guided search (DESIGN.md #12).
+
+``space``     -- the enumerable cross-product of every plan-time knob
+                 (comm strategy, chunking, relayout fold, chunk axis,
+                 execution order policy, Hockney doubling mode, relayout
+                 schedule, Pallas FFT radix, process-mesh shape).
+``costmodel`` -- an analytic bytes/FLOPs/latency predictor for any point
+                 of the space, evaluated WITHOUT lowering or compiling;
+                 its byte counts are asserted bit-for-bit against
+                 ``launch.hlo_stats.comm_bytes_stats`` on lowered HLO.
+``search``    -- predictor-pruned frontier search: rank the space with the
+                 cost model, wall-clock-time only a shortlist (reusing the
+                 ``autotune_comm`` budget/census machinery), persist the
+                 winners in the schema-versioned $REPRO_COMM_CACHE JSON.
+"""
+from repro.plan.space import (PlanPoint, PlanSpace, mesh_shapes_for)
+from repro.plan.costmodel import (CostModel, predict_bytes, switch_traces)
+from repro.plan.search import (SHORTLIST_DIVISOR, guided_comm_candidates,
+                               search_plan)
+
+__all__ = [
+    "PlanPoint", "PlanSpace", "mesh_shapes_for",
+    "CostModel", "predict_bytes", "switch_traces",
+    "SHORTLIST_DIVISOR", "guided_comm_candidates", "search_plan",
+]

@@ -1,0 +1,254 @@
+"""Cost-model-guided frontier search over the plan space (DESIGN.md #12).
+
+Two levels:
+
+* ``guided_comm_candidates`` -- the in-solver path behind
+  ``DistributedPoissonSolver(comm="auto", autotune_search="guided")``:
+  rank the comm sub-space (strategy x n_chunks x fold x chunk_axis) with
+  the analytic predictor, drop chunked candidates whose solve-time
+  zero-padding already costs more than the best monolithic plan, and hand
+  only the shortlisted frontier to ``core.comm.autotune_comm`` (which
+  keeps its budget/census/cache machinery -- the shortlist labels are
+  part of the cache identity, so a model change can never replay a stale
+  winner).
+* ``search_plan`` -- the plan-level search over order_policy x doubling x
+  relayout x radix x mesh shape ON TOP of the comm sub-space: plans are
+  built with ``make_plan`` (cheap numpy, no lowering) for prediction,
+  only the top-k points are compiled and wall-clock timed, and the winner
+  is persisted in the schema-versioned $REPRO_COMM_CACHE JSON keyed by
+  (shape-family, devices, dtype, engine).
+
+The frontier policy is ``SHORTLIST_DIVISOR``: time ceil(space/6) of the
+live candidates (>= 1), which on the default 12-candidate comm grid times
+2 -- a 6x reduction, gated as ">= 5x fewer timed" by the oracle tests and
+``bench_comm.py --search --check``.
+"""
+from __future__ import annotations
+
+import math
+import time
+from dataclasses import dataclass, field
+
+from repro.core.comm import (cache_load_entries, cache_store_entry,
+                             cfg_label)
+from repro.plan.costmodel import CostModel
+from repro.plan.space import PlanPoint, PlanSpace, mesh_shapes_for
+
+__all__ = ["SHORTLIST_DIVISOR", "guided_comm_candidates", "PlanDecision",
+           "search_plan"]
+
+# fraction of the (post-prune) candidate space that gets wall-clock timed
+SHORTLIST_DIVISOR = 6
+
+
+def _shortlist_size(n_live: int, k=None) -> int:
+    if k is not None:
+        return max(1, min(int(k), n_live))
+    return max(1, math.ceil(n_live / SHORTLIST_DIVISOR))
+
+
+def guided_comm_candidates(plan, p1: int, p2: int, dtype, *, batch=None,
+                           folds=("pack",), max_chunks: int = 4,
+                           relayout: str = "scheduled", max_radix: int = 4,
+                           model: CostModel = None, k=None,
+                           census=None) -> tuple:
+    """Predictor-ranked shortlist of ``CommConfig`` candidates for one
+    solver instance (its plan, mesh extents, dtype and in-block batch).
+
+    ``census`` (when a dict) is extended with the search's account:
+    ``space`` (candidate count), ``predicted`` (label -> predicted
+    seconds), ``pruned_padding`` (chunked candidates dropped because
+    their zero-padding overhead exceeds the predicted win over the best
+    monolithic plan) and ``shortlist`` (the labels handed to the timer).
+    """
+    model = model or CostModel()
+    space = PlanSpace.comm(max_chunks=max_chunks, folds=folds,
+                           batched=batch is not None, relayout=relayout)
+    cands = space.comm_configs()
+    preds, metas = {}, {}
+    for cfg in cands:
+        c, meta = model.comm_cost(plan, p1, p2, dtype, cfg, batch=batch,
+                                  max_radix=max_radix)
+        preds[cfg_label(cfg)] = c
+        metas[cfg_label(cfg)] = meta
+    # padding prune: a chunked candidate that needs solve-time zero-padding
+    # AND does not even beat the best monolithic plan under the model has
+    # no path to winning -- timing it is pure sweep cost (the prime-extent
+    # regression in test_plansearch.py)
+    mono_floor = min((preds[cfg_label(c)] for c in cands
+                      if c.n_chunks == 1), default=float("inf"))
+    pruned = [cfg_label(c) for c in cands
+              if metas[cfg_label(c)]["padded"]
+              and preds[cfg_label(c)] >= mono_floor]
+    live = [c for c in cands if cfg_label(c) not in pruned]
+    live.sort(key=lambda c: preds[cfg_label(c)])
+    short = tuple(live[:_shortlist_size(len(live), k)])
+    if census is not None:
+        census["space"] = len(cands)
+        census["predicted"] = preds
+        census["pruned_padding"] = pruned
+        census["shortlist"] = [cfg_label(c) for c in short]
+    return short
+
+
+# ---------------------------------------------------------------------------
+# plan-level search (mesh shape / order / doubling / relayout / radix)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class PlanDecision:
+    """Outcome of one ``search_plan`` run."""
+
+    point: PlanPoint
+    seconds: float = float("nan")     # measured winner time (nan on cache)
+    timings: dict = field(default_factory=dict)   # label -> seconds
+    census: dict = field(default_factory=dict)
+    cached: bool = False
+
+
+def _family_key(plan, n_devices: int, axes, dtype, engine: str,
+                batch) -> str:
+    """Shape-family identity of a persisted plan decision: what must match
+    for a cached winner to be replayed."""
+    return repr(("plansearch", 1,
+                 tuple(p.n for p in plan.dirs),
+                 tuple((p.bc.left.name, p.bc.right.name) for p in plan.dirs),
+                 plan.dirs[0].layout.name,
+                 int(n_devices), tuple(axes), str(dtype), engine, batch))
+
+
+def search_plan(shape, L, bcs, *, layout=None, green_kind=None,
+                dtype=None, engine: str = "xla", devices=None,
+                axes=("data", "model"), mesh_shapes=None,
+                order_policies=("layout", "natural"),
+                doublings=("deferred",), relayouts=("scheduled",),
+                max_chunks: int = 4, batch=None, k=None, reps: int = 3,
+                budget_s=None, cache_path=None, model: CostModel = None,
+                census=None, solver_kw=None) -> PlanDecision:
+    """Search the FULL plan space for one problem and return the winner.
+
+    Every (mesh_shape x order_policy x doubling x relayout x radix) combo
+    is planned with ``make_plan`` (cheap, no lowering) and its comm
+    sub-space predicted; only the global top-k points (default
+    ceil(space/SHORTLIST_DIVISOR)) are built through ``get_solver`` and
+    wall-clock timed.  The winner is persisted under ``cache_path``
+    (default $REPRO_COMM_CACHE) in the schema-versioned JSON, keyed by
+    shape family + device count + dtype + engine.
+    """
+    import os
+
+    import jax
+    import jax.numpy as jnp
+
+    from repro.core.bc import DataLayout
+    from repro.core import green as gr
+    from repro.core.comm import _timed_call
+    from repro.core.engine import TransformEngine
+    from repro.core.solver import get_solver, make_plan
+
+    layout = layout if layout is not None else DataLayout.CELL
+    green_kind = green_kind if green_kind is not None else gr.GreenKind.CHAT2
+    dtype = dtype if dtype is not None else jnp.float32
+    model = model or CostModel()
+    census = census if census is not None else {}
+    devices = devices if devices is not None else jax.devices()
+    n_dev = len(devices)
+    if mesh_shapes is None:
+        mesh_shapes = mesh_shapes_for(n_dev)
+    if cache_path is None:
+        cache_path = os.environ.get("REPRO_COMM_CACHE") or None
+
+    ref_plan = make_plan(shape, L, bcs, layout, green_kind)
+    fam = _family_key(ref_plan, n_dev, axes, jnp.dtype(dtype).name, engine,
+                      batch)
+    if cache_path:
+        entry = cache_load_entries(cache_path, census=census).get(fam)
+        if entry is not None:
+            try:
+                pt = PlanPoint.fromdict(entry["point"])
+            except (KeyError, TypeError, ValueError):
+                pt = None       # malformed entry: fall through to a search
+            if pt is not None:
+                return PlanDecision(pt, census=dict(census, cached=True),
+                                    cached=True)
+
+    space = PlanSpace.full(max_chunks=max_chunks, engine=engine,
+                           batched=batch is not None,
+                           order_policies=order_policies,
+                           doublings=doublings, relayouts=relayouts,
+                           mesh_shapes=mesh_shapes)
+    plans, preds, metas = {}, {}, {}
+    for pt in space.points():
+        pk = (pt.order_policy, pt.doubling)
+        if pk not in plans:
+            plans[pk] = make_plan(shape, L, bcs, layout, green_kind,
+                                  doubling=pt.doubling,
+                                  order_policy=pt.order_policy)
+        c, meta = model.plan_cost(pt, plans[pk], dtype, batch=batch)
+        preds[pt] = c
+        metas[pt] = meta
+    mono_floor = min((c for pt, c in preds.items() if pt.n_chunks == 1),
+                     default=float("inf"))
+    pruned = [pt for pt in preds
+              if metas[pt]["padded"] and preds[pt] >= mono_floor]
+    live = sorted((pt for pt in preds if pt not in pruned),
+                  key=preds.get)
+    short = live[:_shortlist_size(len(live), k)]
+    census.update(space=len(preds),
+                  predicted={pt.label(): preds[pt] for pt in live},
+                  pruned_padding=[pt.label() for pt in pruned],
+                  shortlist=[pt.label() for pt in short])
+
+    timings, failed, skipped = {}, {}, []
+    kw = dict(solver_kw or {})
+
+    def time_point(pt):
+        import numpy as np
+        from jax.sharding import Mesh
+        p1, p2 = pt.mesh_shape
+        mesh = Mesh(np.array(devices[:p1 * p2]).reshape(p1, p2), axes)
+        eng = (TransformEngine("pallas", max_radix=pt.radix)
+               if engine == "pallas" else engine)
+        s = get_solver(shape, L, bcs, layout=layout, green_kind=green_kind,
+                       mesh=mesh, axes=axes, comm=pt.comm(), dtype=dtype,
+                       engine=eng, doubling=pt.doubling,
+                       relayout=pt.relayout, order_policy=pt.order_policy,
+                       **kw)
+        f = np.ones(((batch,) if batch else ()) + tuple(s.input_shape),
+                    dtype=jnp.dtype(dtype).name)
+        s.solve(f).block_until_ready()            # compile + warm
+        best = float("inf")
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            s.solve(f).block_until_ready()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    for pt in short:
+        lbl = pt.label()
+        try:
+            t, why = _timed_call(time_point, pt, budget_s)
+        except Exception as e:      # noqa: BLE001 -- candidate may not build
+            failed[lbl] = f"{type(e).__name__}: {e}"[:200]
+            continue
+        if why == "timeout":
+            skipped.append(lbl)
+            continue
+        timings[lbl] = float(t)
+    census.update(timed=dict(timings), failed=failed,
+                  skipped_budget=skipped)
+    if not timings:
+        # every shortlisted point failed: fall back to the predictor's
+        # best point (it is at least a valid plan)
+        win = short[0] if short else PlanPoint(mesh_shape=mesh_shapes[0])
+        return PlanDecision(win, timings=timings, census=census)
+    by_label = {pt.label(): pt for pt in short}
+    best_label = min(timings, key=timings.get)
+    win = by_label[best_label]
+    if cache_path:
+        cache_store_entry(cache_path, fam, {
+            "point": win.asdict(),
+            "timings_us": {l: round(t * 1e6, 1)
+                           for l, t in timings.items()}})
+    return PlanDecision(win, seconds=timings[best_label], timings=timings,
+                        census=census)

@@ -86,20 +86,26 @@ class PlanSpec:
     order_policy: str = "layout"
     mesh: object = None
     solver_kw: tuple = ()
+    # comm="auto" candidate policy on distributed specs (DESIGN.md #12):
+    # "guided" warms the pool off the cost-model shortlist, "brute" sweeps
+    search: str = "guided"
 
     def key(self):
         return sv._freeze((self.shape, self.L, self.bcs, self.layout,
                            self.green_kind, self.eps_factor, self.engine,
                            self.doubling, self.relayout, self.order_policy,
-                           self.mesh, self.solver_kw))
+                           self.mesh, self.solver_kw, self.search))
 
     def build(self):
+        kw = dict(self.solver_kw)
+        if self.mesh is not None:
+            kw.setdefault("autotune_search", self.search)
         return sv.get_solver(self.shape, self.L, self.bcs,
                              layout=self.layout, green_kind=self.green_kind,
                              eps_factor=self.eps_factor, engine=self.engine,
                              doubling=self.doubling, relayout=self.relayout,
                              order_policy=self.order_policy, mesh=self.mesh,
-                             **dict(self.solver_kw))
+                             **kw)
 
 
 @dataclass(frozen=True)

@@ -225,9 +225,12 @@ def test_autotune_cache_not_replayed_across_doubling_modes(tmp_path):
     assert dp.autotune_results, (
         "pruned plan replayed the dense plan's cached winner")
     # both entries coexist under distinct keys in the persisted JSON
+    # (schema-2 envelope: {"schema": 2, "entries": {...}})
     import json
     with open(path) as fh:
         data = json.load(fh)
-    assert len(data) == 2, list(data)
-    assert sum("'doubling', 'upfront'" in k for k in data) == 1
-    assert sum("'doubling', 'deferred'" in k for k in data) == 1
+    assert data["schema"] == 2, data
+    entries = data["entries"]
+    assert len(entries) == 2, list(entries)
+    assert sum("'doubling', 'upfront'" in k for k in entries) == 1
+    assert sum("'doubling', 'deferred'" in k for k in entries) == 1
