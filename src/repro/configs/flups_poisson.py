@@ -49,8 +49,13 @@ class PoissonArchConfig:
     comm_autotune_budget_s: float = 0.0
     # numerical health guard armed on every solve (DESIGN.md #10):
     # "" (off) | "nan" (finiteness) | "residual" (finiteness + FD residual)
+    # | "abft" (per-stage checksum invariants with inline selective
+    # recompute and wire/compute attribution -- DESIGN.md #13; overhead
+    # gated <=5% in CI via bench_solve --check)
     verify: str = ""
     verify_rtol: float = 0.5
+    # ABFT mismatch tolerance; 0.0 = auto per dtype (runtime.abft.tol_for)
+    abft_rtol: float = 0.0
 
 
 U = (BCType.UNB, BCType.UNB)

@@ -45,6 +45,7 @@ import threading
 import warnings
 from dataclasses import dataclass
 
+import jax
 import jax.numpy as jnp
 from jax import lax
 
@@ -238,11 +239,36 @@ class CommStrategy:
     name: str = "?"
 
     def __init__(self, n_chunks: int = 1, axis_sizes=None,
-                 fold: str = "pack"):
+                 fold: str = "pack", abft=None):
         self.n_chunks = max(int(n_chunks), 1)
         self.axis_sizes = dict(axis_sizes or {})
         assert fold in FOLDS, fold
         self.fold = fold
+        # checksum-carrying mode (DESIGN.md #13): ``(collector, tol)`` or
+        # None.  When set, every collective this strategy issues ships a
+        # length-P checksum row (one reduction per destination rank over
+        # the prepared payload) through a sidecar all_to_all and verifies
+        # it receive-side -- corruption on the wire is then attributed to
+        # ``wire.<axis>`` instead of a compute stage.
+        self.abft = abft
+
+    def _collective(self, x, axis_name, split_axis, concat_axis):
+        """One (possibly checksum-carrying) all-to-all.  The wire fault
+        hook sits between the sender-side checksum and the exchange:
+        exactly the window a real link flip occupies."""
+        ab = self.abft
+        p = self.axis_sizes.get(axis_name)
+        if ab is not None and p and x.shape[split_axis % x.ndim] % p == 0:
+            from repro.runtime import abft as _abft
+            col, tol = ab
+            cs = _abft.wire_checksums(x, split_axis, p)
+            y = _a2a(_faults.taint(f"comm.wire.{self.name}", x),
+                     axis_name, split_axis, concat_axis)
+            cs_recv = lax.all_to_all(cs, axis_name, 0, 0, tiled=True)
+            return _abft.wire_verify(y, cs_recv, concat_axis, p, col,
+                                     f"wire.{axis_name}", tol)
+        return _a2a(_faults.taint(f"comm.wire.{self.name}", x),
+                    axis_name, split_axis, concat_axis)
 
     @staticmethod
     def _permute(x, permute):
@@ -312,16 +338,37 @@ class CommStrategy:
         return post(y) if post is not None else y
 
 
+@jax.custom_vjp
+def _buffer_barrier(y):
+    """``optimization_barrier`` as a differentiable identity: the barrier
+    is a scheduling hint with no math, but it carries no differentiation
+    rule, and the ABFT sandwich weight (``w = S^T r``, DESIGN.md #13) is
+    built by one vjp through the whole distributed pipeline -- so the
+    cotangent passes straight through."""
+    return lax.optimization_barrier(y)
+
+
+def _buffer_barrier_fwd(y):
+    return _buffer_barrier(y), None
+
+
+def _buffer_barrier_bwd(_, ct):
+    return (ct,)
+
+
+_buffer_barrier.defvjp(_buffer_barrier_fwd, _buffer_barrier_bwd)
+
+
 class A2AStrategy(CommStrategy):
     name = "a2a"
 
     def _switch(self, x, axis_name, split_axis, concat_axis,
                 chunk_axis=None):
-        y = _a2a(x, axis_name, split_axis, concat_axis)
+        y = self._collective(x, axis_name, split_axis, concat_axis)
         # explicit pack/unpack materialization: force a contiguous copy so
         # the collective is surrounded by dedicated buffer ops (flups a2a)
         try:
-            y = lax.optimization_barrier(y)
+            y = _buffer_barrier(y)
         except NotImplementedError:
             # older jax has no batching rule for optimization_barrier (hit
             # under the multi-pod vmap); the barrier is a scheduling hint
@@ -335,7 +382,7 @@ class FusedStrategy(CommStrategy):
 
     def _switch(self, x, axis_name, split_axis, concat_axis,
                 chunk_axis=None):
-        return _a2a(x, axis_name, split_axis, concat_axis)
+        return self._collective(x, axis_name, split_axis, concat_axis)
 
 
 class PipelinedStrategy(CommStrategy):
@@ -346,10 +393,11 @@ class PipelinedStrategy(CommStrategy):
     def _switch(self, x, axis_name, split_axis, concat_axis,
                 chunk_axis=None):
         if self.n_chunks <= 1:
-            return _a2a(x, axis_name, split_axis, concat_axis)
+            return self._collective(x, axis_name, split_axis, concat_axis)
         ax = self._chunk_axis(x, split_axis, concat_axis, chunk_axis)
         chunks, ln = _split_chunks(x, ax, self.n_chunks)
-        outs = [_a2a(c, axis_name, split_axis, concat_axis) for c in chunks]
+        outs = [self._collective(c, axis_name, split_axis, concat_axis)
+                for c in chunks]
         return crop_axis(jnp.concatenate(outs, axis=ax), ax, ln)
 
 
@@ -363,7 +411,8 @@ class OverlapStrategy(CommStrategy):
     def _switch(self, x, axis_name, split_axis, concat_axis,
                 chunk_axis=None):
         # plain transpose (no continuation): same wire pattern as pipelined
-        return PipelinedStrategy(self.n_chunks)._switch(
+        return PipelinedStrategy(self.n_chunks, axis_sizes=self.axis_sizes,
+                                 fold=self.fold, abft=self.abft)._switch(
             x, axis_name, split_axis, concat_axis, chunk_axis=chunk_axis)
 
     def stage(self, x, axis_name, split_axis, concat_axis, post=None,
@@ -384,9 +433,11 @@ class OverlapStrategy(CommStrategy):
         ax_out = ax if unpack is None else unpack.index(ax)
         chunks, ln = _split_chunks(x, ax, self.n_chunks)
         outs = []
-        inflight = _a2a(chunks[0], axis_name, split_axis, concat_axis)
+        inflight = self._collective(chunks[0], axis_name, split_axis,
+                                    concat_axis)
         for k in range(1, self.n_chunks):
-            nxt = _a2a(chunks[k], axis_name, split_axis, concat_axis)
+            nxt = self._collective(chunks[k], axis_name, split_axis,
+                                   concat_axis)
             # overlaps chunk k's wire time
             outs.append(post(self._permute(inflight, unpack)))
             inflight = nxt
@@ -401,10 +452,11 @@ _STRATEGY_CLASSES = {
 }
 
 
-def make_strategy(cfg: CommConfig, axis_sizes=None) -> CommStrategy:
+def make_strategy(cfg: CommConfig, axis_sizes=None,
+                  abft=None) -> CommStrategy:
     return _STRATEGY_CLASSES[cfg.strategy](cfg.n_chunks,
                                            axis_sizes=axis_sizes,
-                                           fold=cfg.fold)
+                                           fold=cfg.fold, abft=abft)
 
 
 def topology_switch(x, axis_name, split_axis: int, concat_axis: int,

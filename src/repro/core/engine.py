@@ -344,33 +344,54 @@ class TransformSchedule:
     layouts: LayoutSchedule = None   # per-stage axis permutations
 
     # -- fused transform+switch stage API (chunk-safe by construction) -----
+    #
+    # Every stage takes an optional ABFT collector (DESIGN.md #13): with
+    # ``col=None`` (the default everywhere) the plain stage is traced --
+    # not one checksum op is emitted, so the verify-off pipelines stay
+    # bit-exact.  With a collector the stage runs under its linearity /
+    # Parseval sandwich with inline selective recompute.
 
-    def fwd_chunk(self, x, d: int):
+    def fwd_chunk(self, x, d: int, col=None, tol=None):
         """Forward 1-D transform of logical direction ``d`` on a full block
         or an uninvolved-axis chunk (the overlap strategy's stage unit), in
         NATURAL layout (moveaxis round trip -- the baseline pipelines)."""
+        if col is not None:
+            from repro.runtime import abft
+            return abft.checked_fwd_chunk(x, d, self, col, tol)
         return fwd_1d(x, self.dirs[d], self)
 
-    def bwd_chunk(self, x, d: int):
+    def bwd_chunk(self, x, d: int, col=None, tol=None):
         """Inverse 1-D transform of logical direction ``d``; chunk-safe."""
+        if col is not None:
+            from repro.runtime import abft
+            return abft.checked_bwd_chunk(x, d, self, col, tol)
         return bwd_1d(x, self.dirs[d], self)
 
-    def fwd_last(self, x, d: int):
+    def fwd_last(self, x, d: int, col=None, tol=None):
         """Forward 1-D transform of direction ``d`` on the LAST axis (the
         layout-scheduled stage unit: the pipeline guarantees the active
         axis is already minor-most, so no data moves here)."""
+        if col is not None:
+            from repro.runtime import abft
+            return abft.checked_fwd_last(x, d, self, col, tol)
         return _fwd_last(x, self.dirs[d], self)
 
-    def bwd_last(self, x, d: int):
+    def bwd_last(self, x, d: int, col=None, tol=None):
         """Inverse 1-D transform of direction ``d`` on the LAST axis."""
+        if col is not None:
+            from repro.runtime import abft
+            return abft.checked_bwd_last(x, d, self, col, tol)
         return _bwd_last(x, self.dirs[d], self)
 
     # live-extent bookkeeping lives on the plan: ``self.dirs[d].valid_in``
     # is the physical extent a topology switch ships for dim ``d`` (see
     # Plan1D; spectral extents are the plain ``n_out`` field)
 
-    def green_multiply(self, yhat, green):
+    def green_multiply(self, yhat, green, col=None, tol=None):
         """The fused pointwise pass (Green x normalization in one multiply)."""
+        if col is not None:
+            from repro.runtime import abft
+            return abft.checked_green(yhat, green, self, col, tol)
         yhat = _faults.taint("green", yhat)
         if self.engine.use_pallas:
             _faults.fail_point("pallas.green")
@@ -394,13 +415,18 @@ class TransformSchedule:
                 and not p.flip and p.in_start == 0
                 and (p.n_in == n or n == 2 * p.n_in))
 
-    def fwd_last_green(self, x, d: int, green):
+    def fwd_last_green(self, x, d: int, green, col=None, tol=None):
         """Forward transform of the LAST forward direction fused with the
         Green multiply: on the Pallas engine the ``spectral_scale`` pass
         runs in the FFT's final-stage registers (one HBM round trip for
         transform + pointwise); anywhere else it is the plain transform
         followed by ``green_multiply``.  ``green`` must be in the same
         layout as ``x`` with the spectral ``d`` axis minor-most."""
+        if col is not None:
+            # the checksum sandwich needs the spectral field BEFORE the
+            # Green multiply, so checking bypasses the fused epilogue
+            return self.green_multiply(self.fwd_last(x, d, col, tol), green,
+                                       col, tol)
         p = self.dirs[d]
         want_cplx = p.dft == "c2c"
         if (not self.can_fuse_green(d)

@@ -436,14 +436,18 @@ class PoissonSolver:
     def __init__(self, shape, L, bcs, layout=DataLayout.CELL,
                  green_kind=gr.GreenKind.CHAT2, eps_factor=2.0,
                  engine="xla", doubling="deferred", relayout="scheduled",
-                 order_policy="layout", verify=None, verify_rtol=0.5):
+                 order_policy="layout", verify=None, verify_rtol=0.5,
+                 abft_rtol=0.0):
         assert relayout in RELAYOUT_MODES, relayout
-        assert verify in (None, "nan", "residual"), verify
+        assert verify in (None, "nan", "residual", "abft",
+                          "abft-stages"), verify
         self._base = dict(shape=tuple(shape), L=L, bcs=bcs, layout=layout,
                           green_kind=green_kind, eps_factor=eps_factor,
                           order_policy=order_policy)
         self.verify = verify
         self.verify_rtol = float(verify_rtol)
+        # ABFT checksum tolerance; 0.0 = auto per data dtype (abft.tol_for)
+        self.abft_rtol = float(abft_rtol)
         self.stats = {"solves": 0, "retries": 0, "verify_failures": 0,
                       "degradations": []}
         self._configure({"engine": as_engine(engine).name,
@@ -481,6 +485,16 @@ class PoissonSolver:
         # batch benchmark calls it directly).
         self._solve = _fresh_jit(self._solve_impl)
         self._solve_jits = {None: self._solve}
+        # ABFT wrappers live in their own caches: they trace DIFFERENT
+        # programs (checksum sandwiches + report outputs), so the clean jit
+        # above stays bit-exact with the checks compiled out.  ``_abft_jits``
+        # holds the fully-checked pipeline (verify="abft-stages" and the
+        # localization re-run); ``_lite_jits`` the cheap end-to-end
+        # linearity sandwich (verify="abft"); ``_lite_weights`` the
+        # plan-time Freivalds pairs (r, w = S^T r), rebuilt per config
+        self._abft_jits = {}
+        self._lite_jits = {}
+        self._lite_weights = {}
 
     def _jitted(self):
         from repro.runtime import faults
@@ -491,29 +505,122 @@ class PoissonSolver:
             self._solve_jits[tok] = fn
         return fn
 
+    def _abft_tol(self, dtype) -> float:
+        from repro.runtime import abft
+        return self.abft_rtol or abft.tol_for(dtype)
+
+    def _abft_fresh_jit(self):
+        """Jit wrapper of the CHECKED pipeline: returns ``(u, report)``
+        where the report vector stacks every stage's mismatch scalar; the
+        stage names are captured into ``holder`` at trace time."""
+        from repro.runtime import abft
+        impl = self._solve_impl
+        holder: list = []
+
+        def call(f):
+            col = abft.Collector()
+            u = impl(f, col=col, tol=self._abft_tol(f.dtype))
+            holder[:] = col.names
+            return u, col.stacked()
+
+        return jax.jit(call), holder
+
+    def _abft_jitted(self):
+        from repro.runtime import faults
+        tok = faults.plan_token()
+        ent = self._abft_jits.get(tok)
+        if ent is None:
+            ent = self._abft_jits[tok] = self._abft_fresh_jit()
+        return ent
+
+    def _lite_reference_impl(self):
+        """XLA baseline pipeline used only to build the sandwich weight
+        ``w = S^T r`` via vjp.  Autodiff-safe regardless of the active
+        engine (Pallas kernels carry no vjp rules) and within sandwich
+        tolerance of every engine/relayout rung: same linear operator up
+        to roundoff."""
+        from .engine import (build_schedule, crop_doubling,
+                             materialize_doubling)
+        plan = self.plan
+        sched = build_schedule(plan, as_engine("xla"))
+        green = self._green_nat
+
+        def impl(f):
+            g = jnp.asarray(green).astype(f.dtype)
+            y = materialize_doubling(f, plan.dirs)
+            for d in plan.order:
+                y = sched.fwd_chunk(y, d)
+            y = sched.green_multiply(y, g)
+            for d in reversed(plan.order):
+                y = sched.bwd_chunk(y, d)
+            if jnp.iscomplexobj(y):
+                y = y.real
+            return crop_doubling(y, plan.dirs).astype(f.dtype)
+
+        return impl
+
+    def _lite_pair(self, shape, dtype):
+        """Plan-time Freivalds pair for one input signature: the fixed
+        probe ``r`` and the weight ``w = S^T r`` (one vjp of the linear
+        solve, traced under fault suppression so an armed plan cannot
+        poison the reference side)."""
+        from repro.runtime import abft, faults
+        key = (tuple(shape), jnp.dtype(dtype).name)
+        rw = self._lite_weights.get(key)
+        if rw is None:
+            r = jnp.asarray(abft.lite_probe(shape, dtype))
+            ref = self._lite_reference_impl()
+            with faults.suppressed():
+                w = jax.jit(lambda rr: jax.vjp(
+                    ref, jnp.zeros(shape, dtype))[1](rr)[0])(r)
+                jax.block_until_ready(w)
+            rw = self._lite_weights[key] = (r, w)
+        return rw
+
+    def _lite_jitted(self, shape, dtype):
+        """Jit of the clean pipeline plus the end-to-end linearity
+        sandwich: returns ``(u, [<r,u>, <w,f>, ||u||^2])`` -- two fused
+        multiply-reduces on top of the solve, nothing per-stage."""
+        from repro.runtime import faults
+        tok = faults.plan_token()
+        key = (tuple(shape), jnp.dtype(dtype).name, tok)
+        fn = self._lite_jits.get(key)
+        if fn is None:
+            r, w = self._lite_pair(shape, dtype)
+            impl = self._solve_impl
+
+            def call(f):
+                u = impl(f)
+                rep = jnp.stack([jnp.sum(r * u), jnp.sum(w * f),
+                                 jnp.sum(u * u)])
+                return u, rep
+
+            fn = self._lite_jits[key] = jax.jit(call)
+        return fn
+
     @property
     def input_shape(self):
         return self.plan.input_shape
 
-    def _solve_impl(self, f):
+    def _solve_impl(self, f, col=None, tol=None):
         if self.relayout == "scheduled":
-            return self._solve_scheduled(f)
+            return self._solve_scheduled(f, col, tol)
         from .engine import crop_doubling, materialize_doubling
         plan = self.plan
         sched = self.schedule
         green = jnp.asarray(self._green).astype(f.dtype)
         y = materialize_doubling(f, plan.dirs)   # no-op when deferred
         for d in plan.order:
-            y = _fwd_1d(y, plan.dirs[d], sched)
-        y = sched.green_multiply(y, green)
+            y = sched.fwd_chunk(y, d, col, tol)
+        y = sched.green_multiply(y, green, col, tol)
         for d in reversed(plan.order):
-            y = _bwd_1d(y, plan.dirs[d], sched)
+            y = sched.bwd_chunk(y, d, col, tol)
         if jnp.iscomplexobj(y):
             y = y.real
         y = crop_doubling(y, plan.dirs)
         return y.astype(f.dtype)
 
-    def _solve_scheduled(self, f):
+    def _solve_scheduled(self, f, col=None, tol=None):
         """Layout-scheduled pipeline (DESIGN.md #9): one composed transpose
         per direction change (where the baseline moveaxis round trips paid
         two), transforms always on the minor-most axis, Green multiplied in
@@ -532,15 +639,15 @@ class PoissonSolver:
         for i, d in enumerate(plan.order[:-1]):
             y = _relayout(y, cur, lay.fwd[i])
             cur = lay.fwd[i]
-            y = sched.fwd_last(y, d)
+            y = sched.fwd_last(y, d, col, tol)
         d_last = plan.order[-1]
         y = _relayout(y, cur, lay.spectral)
-        y = sched.fwd_last_green(y, d_last, green)
+        y = sched.fwd_last_green(y, d_last, green, col, tol)
         cur = lay.spectral
         for i, d in enumerate(reversed(plan.order)):
             y = _relayout(y, cur, lay.bwd[i])
             cur = lay.bwd[i]
-            y = sched.bwd_last(y, d)
+            y = sched.bwd_last(y, d, col, tol)
         y = _relayout(y, cur, nat)
         if jnp.iscomplexobj(y):
             y = y.real
@@ -549,8 +656,16 @@ class PoissonSolver:
 
     def solve(self, f, verify=None):
         """Solve for ``f``; ``verify`` overrides the constructor-level
-        health-guard mode for this call ("nan" | "residual" | None)."""
-        from repro.runtime import faults, health, resilience
+        health-guard mode for this call ("nan" | "residual" | "abft" |
+        "abft-stages" | None).  ``"abft"`` (DESIGN.md #13) is the
+        two-phase guard: every solve runs the cheap end-to-end linearity
+        sandwich, and only a tripped sandwich re-dispatches through the
+        fully-checked pipeline to localize the stage, selectively repair
+        it, and raise ``IntegrityError`` into the degradation ladder if
+        the corruption persists.  ``"abft-stages"`` runs the checked
+        pipeline unconditionally (per-stage sandwiches with inline
+        selective recompute -- the chaos net's mode)."""
+        from repro.runtime import abft, faults, health, resilience
         f = jnp.asarray(f)
         grid = self.input_shape
         assert (f.ndim in (len(grid), len(grid) + 1)
@@ -558,8 +673,34 @@ class PoissonSolver:
         verify = self.verify if verify is None else verify
         self.stats["solves"] += 1
 
+        def checked():
+            fn, names = self._abft_jitted()
+            u, rep = fn(f)
+            abft.verify_report(
+                list(names), np.asarray(rep),
+                tol=self._abft_tol(f.dtype), stats=self.stats,
+                describe="solve")
+            return u
+
         def attempt():
             faults.fail_point("solve.dispatch")
+            if verify == "abft-stages":
+                return checked()
+            if verify == "abft":
+                u, rep = self._lite_jitted(f.shape, f.dtype)(f)
+                m = abft.lite_mismatch(np.asarray(rep))
+                tol = self._abft_tol(f.dtype) * abft.LITE_HEADROOM
+                if m <= tol:
+                    return u
+                # sandwich tripped: localize via the checked pipeline
+                # (selective inline repair; persistent corruption raises
+                # IntegrityError out of verify_report into the ladder)
+                self.stats["verify_failures"] += 1
+                self.stats.setdefault("integrity", []).append({
+                    "stage": "solve.linearity", "kind": "linearity",
+                    "mismatch": float(m), "tol": float(tol),
+                    "action": "localize", "describe": "solve"})
+                return checked()
             u = self._jitted()(f)
             if verify:
                 health.check_solution(
@@ -685,7 +826,7 @@ def get_solver(shape, L, bcs, layout=DataLayout.CELL,
                                          relayout=relayout,
                                          order_policy=order_policy, **kw)
         else:
-            assert set(kw) <= {"verify", "verify_rtol"}, \
+            assert set(kw) <= {"verify", "verify_rtol", "abft_rtol"}, \
                 f"unexpected single-process solver kwargs: {kw}"
             s = PoissonSolver(shape, L, bcs, layout, green_kind, eps_factor,
                               engine=engine, doubling=doubling,

@@ -32,6 +32,20 @@ def _cdt(real_dtype):
     return jnp.complex128 if real_dtype == jnp.float64 else jnp.complex64
 
 
+@jax.jit
+def green_checksum(fhat, green):
+    """Reference side of the ABFT Green-multiply invariant (DESIGN.md #13).
+
+    The spectral pointwise pass is linear in ``fhat``, so its output must
+    reduce to ``sum(fhat * green)``; this computes that reference as ONE
+    fused multiply-reduce (never materializing the product block), which
+    is what keeps the ``verify="abft"`` overhead of checking the solve's
+    only O(N^3) pointwise pass negligible.
+    """
+    g = green if jnp.iscomplexobj(fhat) else green.astype(fhat.dtype)
+    return jnp.sum(fhat * g)
+
+
 @partial(jax.jit, static_argnames=("scale", "interpret"))
 def green_multiply(fhat, green, scale: float = 1.0, interpret: bool = True):
     """Complex (or real) spectral field times real Green + norm factor.

@@ -60,8 +60,11 @@ def main(argv=None):
                          "shortlist, times ~1/6 of the space) or brute "
                          "(exhaustive sweep -- the oracle reference)")
     ap.add_argument("--verify", default=None,
-                    choices=["nan", "residual"],
-                    help="opt-in per-solve health guard (see runtime.health)")
+                    choices=["nan", "residual", "abft"],
+                    help="opt-in per-solve health guard: nan/residual "
+                         "(runtime.health) or abft (checksum-sandwiched "
+                         "pipeline with localize-and-recompute, "
+                         "runtime.abft / DESIGN.md #13)")
     args = ap.parse_args(argv)
 
     import os
@@ -242,7 +245,8 @@ def _run_survivable(args, solver, mesh, comm, rhs, sol, bcs, layout):
                        "device_losses": losses, "err_inf": err,
                        "fault_log": plan.log if plan is not None else [],
                        "retries": stats.get("retries", 0),
-                       "degradations": stats.get("degradations", [])},
+                       "degradations": stats.get("degradations", []),
+                       "integrity": stats.get("integrity", [])},
                       fh, indent=2)
         print(f"[solve] chaos report written to {report_path}")
     return err

@@ -1,0 +1,504 @@
+"""Algorithm-based fault tolerance for the FFT Poisson solve (DESIGN.md #13).
+
+``verify="nan"`` catches non-finite values and ``verify="residual"`` is a
+whole-solve check with full re-solve as the only remedy; neither sees the
+dominant large-machine failure mode -- silent data corruption, a bit flip
+landing a wrong-but-FINITE value in a transform stage, a packed collective
+payload, or a checkpoint leaf.  This module exploits the solve's algebraic
+structure to detect, LOCALIZE, and selectively repair such corruption:
+
+Per-stage linearity checksum ("weighted row checksum")
+    Every 1-D transform ``T`` is linear along its active axis, so it
+    commutes with summing the block's rows::
+
+        sum_rows T(x)  ==  T(sum_rows x)
+
+    Each checked stage snapshots the row sum BEFORE the stage runs,
+    re-applies the 1-D primitive to that single reference row (under
+    ``faults.suppressed()``, so an armed fault spec cannot corrupt both
+    sides identically), and compares.  A mismatch localizes corruption to
+    exactly that stage of that (chunk of the) pipeline.
+
+Parseval energy (forward stages)
+    The unnormalized r2r kinds satisfy ``sum w_out y^2 = sum w_in x^2 /
+    normfact`` with the per-kind endpoint weights of the PR-2 Parseval
+    test net (``tests/test_transforms.py``), and the DFT directions the
+    classical ``sum w |X_k|^2 = n_fft * sum |x|^2`` (half-spectrum
+    interior bins weighted 2).  A quadratic invariant independent of the
+    linear checksum: corruption crafted to cancel in a row sum still
+    shifts the energy.
+
+Green-multiply invariant
+    The pointwise pass is itself linear in ``yhat``, so
+    ``sum(green_multiply(yhat, green)) == sum(yhat * green)`` -- one extra
+    fused multiply-reduce verifies the solve's only O(N^3) pointwise pass.
+
+Checksum-carrying collectives
+    ``CommStrategy`` computes one checksum per destination rank over the
+    packed payload of every topology switch and ships the length-P
+    checksum row through the same switch (a sidecar ``all_to_all`` of P
+    scalars -- negligible wire cost next to the payload).  The receiver
+    re-reduces each source rank's slab and compares: a mismatch there but
+    NOT in the surrounding compute stages attributes the corruption to
+    the wire.  Composes with valid-extent crops (checksums are computed on
+    the prepared payload), chunked strategies (per-chunk sidecars) and
+    scheduled relayouts (permutes happen before packing).
+
+Localize -> recompute -> escalate
+    A checked compute stage retries ITSELF inline (``lax.cond`` on the
+    traced mismatch): the retry branch re-executes only the implicated
+    stage from its still-live input, so a transient flip is repaired
+    without re-running the solve -- and because fault-plan hits are
+    consumed in trace order, a ``count``-limited (transient) spec does not
+    re-fire on the retry while a ``count=-1`` (persistent) one does.  The
+    host inspects the per-stage mismatch report after the solve:
+    repaired stages become ``stats["integrity"]`` records (mirroring
+    ``stats["degradations"]``); unrepaired compute corruption raises
+    ``IntegrityError`` (non-transient -> the PR-6 ladder degrades config
+    rungs and terminally raises ``SolveError``); wire corruption raises a
+    TRANSIENT ``IntegrityError`` (the remedy for a flipped link payload is
+    re-sending, i.e. the ladder's backoff-retry path re-dispatches).
+
+Two-phase guard (``verify="abft"``)
+    Full per-stage checking reads every stage's block at least twice; at
+    validation sizes that is comparable to the FFT work itself.  The
+    production mode therefore runs a CHEAP end-to-end detector on every
+    solve -- the Freivalds-style linearity sandwich ``<r, S f> == <S^T r,
+    f>`` with a fixed deterministic probe ``r`` and the plan-time weight
+    ``w = S^T r`` (one vjp of the linear solve, cached per config): two
+    fused multiply-reduces per solve, no extra collectives beyond the
+    XLA-generated scalar reduction.  Only when the sandwich trips does the
+    solve re-dispatch through the fully-checked pipeline above to
+    localize the stage, selectively repair it, and attribute wire vs
+    compute -- the detect-cheap / localize-precise ladder.
+    ``verify="abft-stages"`` runs the checked pipeline unconditionally
+    (the chaos net's mode, and the right one for non-reproducible
+    transients that a re-dispatch would not re-observe).
+
+Everything here is gated on a ``Collector`` being passed: with
+``verify="abft"`` off the pipelines pass ``col=None`` and not a single
+checksum op is traced -- the verify-off path stays bit-exact.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+from jax import lax
+
+from repro.runtime import faults as _faults
+
+__all__ = ["IntegrityError", "Collector", "tol_for", "checked_fwd_chunk",
+           "checked_bwd_chunk", "checked_fwd_last", "checked_bwd_last",
+           "checked_green", "wire_checksums", "wire_verify",
+           "verify_report", "DEFAULT_RETRIES", "lite_probe",
+           "lite_probe_axes", "lite_mismatch", "lite_mismatch_ab",
+           "LITE_HEADROOM"]
+
+# inline recompute attempts per checked stage before the host escalates
+DEFAULT_RETRIES = 1
+
+# headroom multiplier on tol_for for the end-to-end linearity sandwich:
+# the detector compares two O(N)-term reductions routed through the FULL
+# pipeline (every stage's roundoff accumulates into both sides), so its
+# noise floor sits well above a single stage's
+LITE_HEADROOM = 50.0
+
+_TINY = 1e-30
+
+
+class IntegrityError(RuntimeError):
+    """Corruption detected by an ABFT invariant.  ``stage`` carries the
+    provenance (``verify.abft@<check>``); ``transient`` follows the wire
+    vs compute attribution (wire -> retry-worthy, compute -> ladder)."""
+
+    def __init__(self, msg: str, *, stage=None, mismatch=None,
+                 transient: bool = False):
+        super().__init__(msg)
+        self.stage = stage
+        self.mismatch = mismatch
+        self.transient = transient
+
+
+def tol_for(dtype) -> float:
+    """Relative checksum tolerance for a data dtype: well above roundoff
+    accumulation of the block-sized reductions, well below the relative
+    signature of any meaningful corruption."""
+    return 1e-8 if np.finfo(np.dtype(dtype)).eps < 1e-10 else 3e-4
+
+
+class Collector:
+    """Trace-time accumulator of named mismatch scalars.
+
+    Built fresh inside each abft jit wrapper: stages append (name, traced
+    scalar) pairs while tracing; ``stacked()`` is the report vector the
+    jitted function returns, and ``names`` (captured via a closure holder
+    at trace time) gives the host the stage provenance of each slot."""
+
+    __slots__ = ("names", "vals", "_stages")
+
+    def __init__(self):
+        self.names: list[str] = []
+        self.vals: list = []
+        self._stages: dict[str, int] = {}
+
+    def unique(self, name: str) -> str:
+        """Reserve a unique stage name (chunked stages check the same
+        logical stage several times: ``fwd.1``, ``fwd.1#1``, ...)."""
+        k = self._stages.get(name, 0)
+        self._stages[name] = k + 1
+        return f"{name}#{k}" if k else name
+
+    def add(self, name: str, val):
+        self.names.append(name)
+        self.vals.append(jnp.asarray(val).astype(jnp.float32))
+
+    def stacked(self):
+        if not self.vals:
+            return jnp.zeros((1,), jnp.float32)
+        return jnp.stack(self.vals)
+
+
+# ---------------------------------------------------------------------------
+# mismatch arithmetic
+# ---------------------------------------------------------------------------
+
+def _floor(x, rows: float):
+    """Cancellation-proof checksum scale: the expected magnitude of a sum
+    of ``rows`` entries drawn at the block's rms, so a row sum that
+    happens to cancel to ~0 does not turn roundoff into a false alarm."""
+    rms = jnp.sqrt(jnp.mean(jnp.abs(x) ** 2))
+    return rms * jnp.sqrt(jnp.asarray(rows, rms.dtype))
+
+
+def _mismatch(got, ref, floor):
+    num = jnp.max(jnp.abs(got - ref))
+    den = jnp.maximum(jnp.maximum(jnp.max(jnp.abs(ref)),
+                                  jnp.max(jnp.abs(got))), floor)
+    return (num / (den + _TINY)).astype(jnp.float32)
+
+
+def _bad(m, tol: float):
+    return jnp.logical_or(m > tol, ~jnp.isfinite(m))
+
+
+def _rows_sum(x, axis: int):
+    axes = tuple(a for a in range(x.ndim) if a != axis)
+    return jnp.sum(x, axis=axes)
+
+
+# ---------------------------------------------------------------------------
+# Parseval energy weights (the PR-2 test-net table, productionized)
+# ---------------------------------------------------------------------------
+
+def _r2r_energy_weights(kind, m: int):
+    """Endpoint weights + scale of ``sum w_out y^2 = scale * sum w_in x^2``
+    for the unnormalized scipy r2r conventions (scale = 1/normfact)."""
+    from repro.core import transforms as tr
+    name, t = kind.name[:3].lower(), int(kind.name[3])
+    win = np.ones(m)
+    wout = np.ones(m)
+    if t == 1 and name == "dct":
+        win[0] = win[-1] = 0.5
+        wout = win.copy()
+    elif t == 2:
+        wout[0 if name == "dct" else -1] = 0.5
+    elif t == 3:
+        win[0 if name == "dct" else -1] = 0.5
+    return win, wout, 1.0 / tr.r2r_normfact(kind, m)
+
+
+def _parseval_weights(p):
+    """``(w_in_live, w_out, scale)`` for direction ``p``'s forward
+    transform, or ``(None, None, None)`` when no exact energy identity
+    covers its storage (cropped c2c spectra)."""
+    if p.category in ("sym", "semi"):
+        win, wout, scale = _r2r_energy_weights(p.kind, p.n_fft)
+        return win[:p.n_in], wout[:p.n_out], scale
+    n_live = p.n_fft if p.pre_padded else p.n_in
+    if p.dft == "r2c":
+        if p.n_out != p.n_fft // 2 + 1:
+            return None, None, None
+        wout = np.full(p.n_out, 2.0)
+        wout[0] = 1.0
+        if p.n_fft % 2 == 0:
+            wout[-1] = 1.0
+    else:
+        if p.n_out != p.n_fft:
+            return None, None, None
+        wout = np.ones(p.n_out)
+    return np.ones(n_live), wout, float(p.n_fft)
+
+
+def _energy_mismatch(x, y, p, axis: int):
+    """Forward-stage Parseval check on the (already repaired) output."""
+    win, wout, scale = _parseval_weights(p)
+    if win is None:
+        return None
+    xa = jnp.moveaxis(x, axis, -1)
+    ya = jnp.moveaxis(y, axis, -1)
+    if not p.pre_padded:
+        if p.flip:
+            xa = xa[..., ::-1]
+        xa = xa[..., p.in_start:p.in_start + p.n_in]
+    rdt = jnp.abs(xa).dtype
+    e_in = jnp.sum(jnp.abs(xa) ** 2 * jnp.asarray(win, rdt))
+    e_out = jnp.sum(jnp.abs(ya) ** 2 * jnp.asarray(wout, rdt))
+    ref = scale * e_in
+    den = jnp.maximum(jnp.maximum(ref, e_out), _TINY)
+    return (jnp.abs(e_out - ref) / den).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# checked stages (the sandwich: snapshot -> stage -> verify -> cond-retry)
+# ---------------------------------------------------------------------------
+
+def _checked_1d(x, p, sched, axis: int, fwd: bool, name: str, col, tol,
+                retries: int):
+    from repro.core import engine as _eng
+    prim = _eng._fwd_last if fwd else _eng._bwd_last
+    axis = axis % x.ndim
+    if axis == x.ndim - 1:
+        def apply(v):
+            return prim(v, p, sched)
+    else:
+        def apply(v):
+            return _eng.on_last_axis(v, axis, lambda w: prim(w, p, sched))
+    if col is None:
+        return apply(x)
+    name = col.unique(name)
+    rows = float(x.size // x.shape[axis])
+    s_in = _rows_sum(x, axis)          # BEFORE the stage (and its taints)
+    y = apply(x)
+    with _faults.suppressed():         # reference row: no fault can touch it
+        ref = prim(s_in[None], p, sched)[0]
+    floor = _floor(x, rows)
+    m = _mismatch(_rows_sum(y, axis), ref, floor)
+    col.add(name, m)
+    for _ in range(max(int(retries), 0)):
+        # inline selective recompute: ONLY this stage re-executes, from its
+        # still-live input, and only when the checksum tripped (lax.cond)
+        y = lax.cond(_bad(m, tol), apply, lambda v: y, x)
+        m = _mismatch(_rows_sum(y, axis), ref, floor)
+    col.add(name + ".post", m)
+    if fwd:
+        em = _energy_mismatch(x, y, p, axis)
+        if em is not None:
+            col.add(name + ".energy", em)
+    return y
+
+
+def checked_fwd_chunk(x, d: int, sched, col, tol, retries=DEFAULT_RETRIES):
+    """Natural-layout forward stage (baseline pipelines) with the ABFT
+    sandwich; chunk-safe like ``TransformSchedule.fwd_chunk``."""
+    from repro.core.engine import _batch_ndim
+    p = sched.dirs[d]
+    return _checked_1d(x, p, sched, _batch_ndim(x, sched) + p.dim, True,
+                       f"fwd.{p.dim}", col, tol, retries)
+
+
+def checked_bwd_chunk(x, d: int, sched, col, tol, retries=DEFAULT_RETRIES):
+    from repro.core.engine import _batch_ndim
+    p = sched.dirs[d]
+    return _checked_1d(x, p, sched, _batch_ndim(x, sched) + p.dim, False,
+                       f"bwd.{p.dim}", col, tol, retries)
+
+
+def checked_fwd_last(x, d: int, sched, col, tol, retries=DEFAULT_RETRIES):
+    """Layout-scheduled forward stage (active axis minor-most)."""
+    p = sched.dirs[d]
+    return _checked_1d(x, p, sched, x.ndim - 1, True, f"fwd.{p.dim}", col,
+                       tol, retries)
+
+
+def checked_bwd_last(x, d: int, sched, col, tol, retries=DEFAULT_RETRIES):
+    p = sched.dirs[d]
+    return _checked_1d(x, p, sched, x.ndim - 1, False, f"bwd.{p.dim}", col,
+                       tol, retries)
+
+
+def checked_green(yhat, green, sched, col, tol, retries=DEFAULT_RETRIES):
+    """Green multiply with its linearity invariant + inline recompute."""
+    if col is None:
+        return sched.green_multiply(yhat, green)
+    name = col.unique("green")
+
+    def apply(v):
+        return sched.green_multiply(v, green)
+
+    from repro.kernels.ops import green_checksum
+    y = apply(yhat)
+    with _faults.suppressed():
+        ref = green_checksum(yhat, jnp.asarray(green))
+    floor = _floor(y, float(y.size))
+    m = _mismatch(jnp.sum(y), ref, floor)
+    col.add(name, m)
+    for _ in range(max(int(retries), 0)):
+        y = lax.cond(_bad(m, tol), apply, lambda v: y, yhat)
+        m = _mismatch(jnp.sum(y), ref, floor)
+    col.add(name + ".post", m)
+    return y
+
+
+# ---------------------------------------------------------------------------
+# checksum-carrying collectives (used by repro.core.comm)
+# ---------------------------------------------------------------------------
+
+def wire_checksums(x, split_axis: int, parts: int):
+    """Length-``parts`` checksum row of a packed payload: entry ``r`` is
+    the full reduction of the sub-slab destined to rank ``r``.  Computed
+    on the PREPARED payload (post crop/pad/permute), so it certifies
+    exactly the bytes the collective moves."""
+    sa = split_axis % x.ndim
+    m = x.shape[sa]
+    assert m % parts == 0, (m, parts)
+    xr = jnp.reshape(jnp.moveaxis(x, sa, 0), (parts, -1))
+    return jnp.sum(xr, axis=1)
+
+
+def wire_verify(y, cs_recv, concat_axis: int, parts: int, col, name: str,
+                tol):
+    """Receive-side verification: re-reduce each source rank's gathered
+    slab and compare with its shipped checksum.  Detect-only (the remedy
+    for wire corruption is re-sending, i.e. the host's transient-retry
+    path); returns ``y`` unchanged."""
+    ca = concat_axis % y.ndim
+    n = y.shape[ca]
+    assert n % parts == 0, (n, parts)
+    yr = jnp.reshape(jnp.moveaxis(y, ca, 0), (parts, -1))
+    got = jnp.sum(yr, axis=1)
+    floor = _floor(y, float(y.size // parts))
+    col.add(col.unique(name), _mismatch(got, cs_recv, floor))
+    return y
+
+
+# ---------------------------------------------------------------------------
+# end-to-end linearity sandwich (the cheap always-on tier)
+# ---------------------------------------------------------------------------
+
+def lite_probe(shape, dtype):
+    """Deterministic unit-variance probe field ``r`` for the Freivalds
+    sandwich.  Seeded from the shape (stable across processes), so the
+    plan-time weight ``w = S^T r`` and every solve's probe agree."""
+    import zlib
+    seed = zlib.crc32(repr(tuple(shape)).encode())
+    rng = np.random.default_rng(seed)
+    return rng.standard_normal(tuple(shape)).astype(np.dtype(dtype))
+
+
+def lite_probe_axes(grid_shape, dtype):
+    """Separable (rank-1) probe ``r = q0 (x) q1 (x) q2`` for the
+    distributed sandwich: per-axis factors with ``|q| in [0.5, 1.5]`` --
+    bounded away from zero, so every entry of the outer product has
+    magnitude >= 0.125 and no single-site corruption can hide in a small
+    probe weight (a Gaussian probe has near-zero entries).  Rank-1
+    structure lets the in-graph side contract ``<r, u>`` as three chained
+    axis reductions reading ``u`` exactly once, instead of materializing
+    (and streaming) a full probe field.  Deterministic per grid shape."""
+    import zlib
+    seed = zlib.crc32(repr(("r1",) + tuple(grid_shape)).encode())
+    rng = np.random.default_rng(seed)
+    dt = np.dtype(dtype)
+    return [np.asarray(rng.uniform(0.5, 1.5, m) * rng.choice([-1.0, 1.0], m),
+                       dtype=dt) for m in grid_shape]
+
+
+def lite_mismatch_ab(a, b, floor) -> float:
+    """Relative mismatch of the split sandwich: the in-graph side ``a =
+    <r, u>`` (per-shard partials, host-folded) against the host side
+    ``b = <w, f>`` computed while the device solve runs.  ``floor`` is
+    ``||w||*||f||/sqrt(N)`` -- the natural scale of both dots -- so a
+    near-orthogonal pair cannot turn roundoff into a false alarm.  The
+    probe weights every entry (|r_i| >= 0.125), so NaN/Inf anywhere in
+    ``u`` surfaces as a non-finite ``a`` -> inf mismatch."""
+    a = np.atleast_1d(np.asarray(a, np.float64)).ravel()
+    b = np.atleast_1d(np.asarray(b, np.float64)).ravel()
+    fl = np.broadcast_to(np.atleast_1d(np.asarray(floor, np.float64)).ravel(),
+                         a.shape)
+    worst = 0.0
+    for av, bv, fv in zip(a, b, fl):        # pod-batched: every report row
+        if not (np.isfinite(av) and np.isfinite(bv) and np.isfinite(fv)):
+            return float("inf")
+        den = max(abs(av), abs(bv), fv, _TINY)
+        worst = max(worst, abs(av - bv) / den)
+    return worst
+
+
+def lite_mismatch(triple) -> float:
+    """Relative mismatch of the sandwich: ``triple = (<r,u>, <w,f>,
+    ||u||^2)``.  The norm term floors the denominator so a pair of dots
+    that happen to cancel cannot turn roundoff into a false alarm; any
+    non-finite value reads as corruption (NaN/Inf taints trip it too)."""
+    t = np.asarray(triple, dtype=np.float64).reshape(-1, 3)
+    worst = 0.0
+    for a, b, uu in t:                       # pod-batched: every report row
+        if not (np.isfinite(a) and np.isfinite(b) and np.isfinite(uu)):
+            return float("inf")
+        den = max(abs(a), abs(b), float(np.sqrt(max(uu, 0.0))), _TINY)
+        worst = max(worst, abs(a - b) / den)
+    return worst
+
+
+# ---------------------------------------------------------------------------
+# host-side report verification
+# ---------------------------------------------------------------------------
+
+def _is_bad(v: float, tol: float) -> bool:
+    return (not np.isfinite(v)) or v > tol
+
+
+def verify_report(names, report, *, tol: float, stats=None,
+                  describe: str = "solve"):
+    """Inspect one solve's stacked mismatch report.
+
+    Appends structured records to ``stats["integrity"]`` (mirroring
+    ``stats["degradations"]``): ``action="recompute"`` for stages whose
+    inline retry repaired the corruption, ``action="escalate"`` for
+    surviving mismatches.  Raises ``IntegrityError`` when any check is
+    still tripped after repair -- transient iff every surviving mismatch
+    is wire-attributed.  Returns the repair records."""
+    rep = np.asarray(report, dtype=np.float64)
+    if rep.ndim > 1:                       # pod-batched solves: worst slot
+        rep = rep.reshape(-1, rep.shape[-1]).max(axis=0)
+    vals = dict(zip(names, rep))
+    records, failures = [], []
+    for nm in names:
+        v = float(vals[nm])
+        if nm.endswith(".post"):
+            continue
+        if nm.endswith(".energy"):
+            # quadratic invariant: double roundoff sensitivity vs the
+            # linear checksum -> 10x headroom on the same tolerance
+            if _is_bad(v, 10.0 * tol):
+                failures.append((nm, v, "energy"))
+            continue
+        if nm.startswith("wire."):
+            if _is_bad(v, tol):
+                failures.append((nm, v, "wire"))
+            continue
+        post = vals.get(nm + ".post")
+        if post is None:
+            if _is_bad(v, tol):
+                failures.append((nm, v, "compute"))
+        elif _is_bad(v, tol) and not _is_bad(float(post), tol):
+            records.append({"stage": nm, "kind": "compute",
+                            "mismatch": v, "post": float(post),
+                            "action": "recompute", "attempts": 1})
+        elif _is_bad(v, tol):
+            failures.append((nm, v, "compute"))
+    if stats is not None and (records or failures):
+        ledger = stats.setdefault("integrity", [])
+        ledger.extend(records)
+        ledger.extend({"stage": nm, "kind": kind, "mismatch": v,
+                       "action": "escalate"} for nm, v, kind in failures)
+    if failures:
+        if stats is not None:
+            stats["verify_failures"] = stats.get("verify_failures", 0) + 1
+        nm, v, kind = max(
+            failures,
+            key=lambda t: t[1] if np.isfinite(t[1]) else np.inf)
+        raise IntegrityError(
+            f"{describe}: ABFT {kind} checksum mismatch at {nm} "
+            f"(mismatch {v:.3e}, tol {tol:.1e})",
+            stage=f"verify.abft@{nm}", mismatch=v,
+            transient=all(k == "wire" for _, _, k in failures))
+    return records

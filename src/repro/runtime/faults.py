@@ -16,10 +16,12 @@ them no-ops (one ``None`` check) when no plan is active:
     torn mid-leaf -- deterministically, at the same point every run.
 
 ``taint(stage, x)``
-    Returns ``x`` with one entry overwritten by NaN/Inf when a ``nan`` /
-    ``inf`` spec matches.  The write is emitted at trace time, so the
-    corruption rides inside the jitted pipeline exactly like a real
-    numerical fault in that stage.
+    Returns ``x`` with one entry overwritten by NaN/Inf (kinds ``nan`` /
+    ``inf``) or perturbed by a finite delta (kind ``flip`` -- the silent-
+    data-corruption model the ABFT layer must catch: a bit flip lands a
+    wrong-but-finite value that ``verify="nan"`` is blind to).  The write
+    is emitted at trace time, so the corruption rides inside the jitted
+    pipeline exactly like a real numerical fault in that stage.
 
 ``should_fire(kind, step=k)``
     Driver-level poll (no raise): the ``launch.solve --steps`` loop asks it
@@ -42,16 +44,20 @@ import fnmatch
 import json
 import os
 import threading
+import time
 from dataclasses import dataclass, field
 
 __all__ = ["InjectedFault", "FaultSpec", "FaultPlan", "active", "fail_point",
-           "taint", "should_fire", "mangle_cache_entry", "plan_token",
-           "plan_from_env"]
+           "taint", "taint_host", "should_fire", "mangle_cache_entry",
+           "plan_token", "plan_from_env", "suppressed"]
 
-# raising kinds (fail_point); value kinds (taint) are "nan" / "inf";
-# "corrupt_cache" is consumed by the autotune-cache loader
-RAISING_KINDS = ("error", "pallas_lowering", "device_loss", "torn_write")
-VALUE_KINDS = ("nan", "inf")
+# raising kinds (fail_point); "stall" wedges the hook (sleeps ``seconds``)
+# instead of raising -- the model of a hung collective / stuck worker the
+# server drain deadline must survive; value kinds (taint) are "nan" /
+# "inf" / "flip"; "corrupt_cache" is consumed by the autotune-cache loader
+RAISING_KINDS = ("error", "pallas_lowering", "device_loss", "torn_write",
+                 "stall")
+VALUE_KINDS = ("nan", "inf", "flip")
 KINDS = RAISING_KINDS + VALUE_KINDS + ("corrupt_cache",)
 
 
@@ -77,6 +83,7 @@ class FaultSpec:
                polled step equals this (None = any step).
     ``transient``: mark raised faults retryable (the backoff path) instead
                of degradation-worthy.
+    ``seconds``: ``stall`` kinds only -- how long the hook wedges.
     """
 
     kind: str
@@ -85,6 +92,7 @@ class FaultSpec:
     count: int = 1
     step: int | None = None
     transient: bool = False
+    seconds: float = 30.0
     hits: int = field(default=0, compare=False)
     fired: int = field(default=0, compare=False)
 
@@ -170,7 +178,33 @@ def plan_from_env(env: str = "REPRO_FAULTS") -> FaultPlan | None:
     return FaultPlan(json.loads(raw))
 
 
+_SUPPRESS = threading.local()
+
+
+class suppressed:
+    """Context manager making ``fail_point``/``taint`` no-ops on this
+    thread.  The ABFT layer re-applies a transform to its checksum row to
+    build the reference side of an invariant; without suppression an armed
+    spec would fire a second time on that reference row and corrupt both
+    sides of the comparison identically, hiding the fault."""
+
+    def __enter__(self):
+        self._prev = getattr(_SUPPRESS, "on", False)
+        _SUPPRESS.on = True
+        return self
+
+    def __exit__(self, *exc):
+        _SUPPRESS.on = self._prev
+        return False
+
+
+def _suppressed() -> bool:
+    return getattr(_SUPPRESS, "on", False)
+
+
 def active() -> FaultPlan | None:
+    if _suppressed():
+        return None
     return _ACTIVE[-1] if _ACTIVE else None
 
 
@@ -178,23 +212,36 @@ def plan_token():
     """Identity of the active plan (None when inactive) -- mixed into the
     ``get_solver`` cache key so solvers traced under an armed plan are
     never served to fault-free callers."""
-    p = active()
+    p = _ACTIVE[-1] if _ACTIVE else None
     return None if p is None else p._token
 
 
 def fail_point(stage: str):
-    """Raise ``InjectedFault`` when a raising spec matches this stage."""
+    """Raise ``InjectedFault`` when a raising spec matches this stage; a
+    ``stall`` spec wedges the hook for ``spec.seconds`` instead (modelling
+    a hung collective or stuck worker thread)."""
     p = active()
     if p is None:
         return
     s = p._poll(stage, RAISING_KINDS)
-    if s is not None:
-        raise InjectedFault(stage, s.kind, transient=s.transient)
+    if s is None:
+        return
+    if s.kind == "stall":
+        time.sleep(s.seconds)
+        return
+    raise InjectedFault(stage, s.kind, transient=s.transient)
+
+
+def _flip_delta(mod, flat):
+    # finite SDC model: a high-bit flip perturbs one scalar by well above
+    # the block's dynamic range (8*max + 1 keeps it finite yet decisive)
+    return 8.0 * mod.max(mod.abs(flat)) + 1.0
 
 
 def taint(stage: str, x):
-    """Overwrite one entry of ``x`` with NaN/Inf when a value spec matches
-    (trace-time: the corruption is part of the emitted computation)."""
+    """Corrupt one entry of ``x`` when a value spec matches (trace-time:
+    the corruption is part of the emitted computation).  ``nan``/``inf``
+    overwrite; ``flip`` adds a finite out-of-range delta."""
     p = active()
     if p is None:
         return x
@@ -202,9 +249,33 @@ def taint(stage: str, x):
     if s is None:
         return x
     import jax.numpy as jnp
-    bad = jnp.inf if s.kind == "inf" else jnp.nan
-    flat = jnp.ravel(x).at[0].set(bad)
+    flat = jnp.ravel(x)
+    if s.kind == "flip":
+        flat = flat.at[0].add(_flip_delta(jnp, flat).astype(flat.dtype))
+    else:
+        bad = jnp.inf if s.kind == "inf" else jnp.nan
+        flat = flat.at[0].set(bad)
     return flat.reshape(x.shape)
+
+
+def taint_host(stage: str, arr):
+    """Host-side (numpy) variant of ``taint`` for data that never enters a
+    trace -- checkpoint leaves read back from disk.  Models storage rot
+    between save and restore; the manifest content digests must catch it."""
+    p = active()
+    if p is None:
+        return arr
+    s = p._poll(stage, VALUE_KINDS)
+    if s is None:
+        return arr
+    import numpy as np
+    out = np.array(arr)  # private copy; never rot the caller's buffer
+    flat = out.reshape(-1)
+    if s.kind == "flip":
+        flat[0] += np.asarray(_flip_delta(np, flat), dtype=out.dtype)
+    else:
+        flat[0] = np.inf if s.kind == "inf" else np.nan
+    return out
 
 
 def should_fire(kind: str, step=None, stage: str = "driver") -> bool:

@@ -21,6 +21,8 @@ equivalent pipelines -- matches the fault-free baseline.
 """
 from __future__ import annotations
 
+import os
+import random
 import time
 import warnings
 from dataclasses import dataclass
@@ -56,11 +58,30 @@ class SolveError(RuntimeError):
 @dataclass(frozen=True)
 class RetryPolicy:
     """Bounded exponential backoff for transient failures (the whole-solve
-    budget: ``retries`` attempts across all rungs)."""
+    budget: ``retries`` attempts across all rungs).
+
+    ``jitter="decorrelated"`` (default) draws each delay uniformly from
+    ``[base_delay, 3 * previous_delay]`` capped at ``max_delay`` (the AWS
+    decorrelated-jitter schedule) so co-batched tenants that trip on the
+    same transient do NOT retry in lockstep; ``jitter="none"`` restores
+    the fixed doubling schedule.  ``seed`` pins the jitter RNG (falling
+    back to ``$REPRO_RETRY_SEED``, then entropy) for deterministic tests.
+    """
 
     retries: int = 2
     base_delay: float = 0.05
     max_delay: float = 1.0
+    jitter: str = "decorrelated"
+    seed: int | None = None
+
+    def delay_rng(self):
+        if self.jitter == "none":
+            return None
+        seed = self.seed
+        if seed is None:
+            env = os.environ.get("REPRO_RETRY_SEED", "").strip()
+            seed = int(env) if env else None
+        return random.Random(seed)
 
 
 def next_rung(cfg: dict):
@@ -125,6 +146,7 @@ def run_with_ladder(attempt, *, config: dict, reconfigure, stats: dict,
     cfg = dict(config)
     retries_left = policy.retries
     delay = policy.base_delay
+    rng = policy.delay_rng()
     records = stats.setdefault("degradations", [])
     while True:
         try:
@@ -145,7 +167,13 @@ def run_with_ladder(attempt, *, config: dict, reconfigure, stats: dict,
                 _warn_once(f"{describe}: transient failure at {stage} "
                            f"({type(e).__name__}); retrying with backoff")
                 sleep(delay)
-                delay = min(2.0 * delay, policy.max_delay)
+                if rng is None:
+                    delay = min(2.0 * delay, policy.max_delay)
+                else:
+                    delay = min(policy.max_delay,
+                                rng.uniform(policy.base_delay,
+                                            max(delay, policy.base_delay)
+                                            * 3.0))
                 reconfigure(dict(cfg))
                 continue
             nxt = next_rung(cfg)

@@ -60,7 +60,14 @@ class AdmissionError(RuntimeError):
 
 
 class ServerClosed(AdmissionError):
-    """Request submitted to a stopped/draining server."""
+    """Request submitted to a stopped/draining server, or failed by the
+    drain deadline at shutdown.  ``queue_position`` (1-based, None for
+    admission-time rejections) records where the request sat in the
+    unserved queue when the deadline expired."""
+
+    def __init__(self, msg: str, *, queue_position=None):
+        super().__init__(msg)
+        self.queue_position = queue_position
 
 
 @dataclass(frozen=True)
@@ -121,6 +128,7 @@ class SolveResult:
     solve_s: float
     total_s: float
     degradations: tuple = ()
+    integrity: tuple = ()    # ABFT repair/escalation records (verify="abft")
 
 
 @dataclass
@@ -133,6 +141,11 @@ class _Request:
     admit_t: float
     verify: str | None = None
     fault_plan: object = None
+    # settled = response delivered (result, failure, or drain-deadline
+    # ServerClosed) and the inflight count decremented -- exactly once,
+    # even when a wedged worker completes after the deadline already
+    # failed its batch
+    settled: bool = False
 
 
 @dataclass
@@ -171,6 +184,11 @@ class PoissonServer:
     ``workers``       solve worker threads (distinct plan keys execute
                       concurrently; one key's batches stay ordered through
                       the flush queue)
+    ``drain_timeout_s``  bound on ``stop(drain=True)``: once the deadline
+                      expires, every unserved request fails with
+                      ``ServerClosed`` (carrying its queue position) so a
+                      wedged solve can never hang shutdown.  None = wait
+                      forever (the pre-deadline behaviour)
 
     Use as a context manager or call ``start()``/``stop()``.  ``submit``
     returns a ``concurrent.futures.Future`` resolving to ``SolveResult``.
@@ -179,7 +197,7 @@ class PoissonServer:
     def __init__(self, *, max_batch: int = 8, max_delay_ms: float = 2.0,
                  batch_ranks=None, memory_budget_mb=None,
                  max_pending: int = 1024, workers: int = 1,
-                 verify=None):
+                 verify=None, drain_timeout_s: float | None = 30.0):
         assert max_batch >= 1 and max_pending >= 1 and workers >= 1
         self.max_batch = int(max_batch)
         self.max_delay_s = float(max_delay_ms) * 1e-3
@@ -188,6 +206,7 @@ class PoissonServer:
         assert self.batch_ranks[-1] >= self.max_batch, (
             "batch_ranks must cover max_batch", self.batch_ranks)
         self.verify = verify
+        self.drain_timeout_s = drain_timeout_s
         self.pool = WarmPool(
             None if memory_budget_mb is None
             else int(memory_budget_mb * 1e6))
@@ -196,6 +215,7 @@ class PoissonServer:
         self._ids = itertools.count()
         self._cv = threading.Condition()
         self._pending: dict = {}            # key -> _Pending
+        self._dispatched: dict = {}         # request_id -> _Request, flushed
         self._inflight = 0                  # admitted, not yet responded
         self._running = False
         self._draining = False
@@ -206,7 +226,7 @@ class PoissonServer:
         self.stats = {"admitted": 0, "rejected": 0, "completed": 0,
                       "failed": 0, "batches": 0, "deadline_flushes": 0,
                       "full_flushes": 0, "drain_flushes": 0,
-                      "padded_rhs": 0}
+                      "padded_rhs": 0, "drain_timeouts": 0}
 
     # -- lifecycle ---------------------------------------------------------
     def start(self):
@@ -224,9 +244,17 @@ class PoissonServer:
             t.start()
         return self
 
-    def stop(self, drain: bool = True):
+    def stop(self, drain: bool = True, timeout=None):
         """Stop the server; ``drain=True`` (default) first serves every
-        admitted request, ``drain=False`` fails pending ones."""
+        admitted request -- bounded by ``timeout`` (default: the
+        constructor's ``drain_timeout_s``).  When the deadline expires,
+        every still-unserved request fails with ``ServerClosed`` carrying
+        its queue position, so one wedged solve (a stalled collective, a
+        fault-armed shadow batch) cannot hang shutdown; the wedged worker
+        thread is abandoned as a daemon and its late result is discarded
+        by the per-request ``settled`` guard.  ``drain=False`` fails
+        pending requests immediately."""
+        deadline = self.drain_timeout_s if timeout is None else timeout
         with self._cv:
             if not self._running:
                 return
@@ -234,6 +262,7 @@ class PoissonServer:
             if not drain:
                 for p in self._pending.values():
                     for r in p.requests:
+                        r.settled = True
                         r.future.set_exception(
                             ServerClosed("server stopped without drain"))
                         self._request_done()
@@ -241,15 +270,48 @@ class PoissonServer:
             self._cv.notify_all()
         # wait for the dispatcher to flush the tail, then stop the workers
         with self._cv:
-            self._cv.wait_for(
-                lambda: not self._pending and self._inflight == 0)
+            drained = self._cv.wait_for(
+                lambda: not self._pending and self._inflight == 0,
+                timeout=deadline)
+            if not drained:
+                self._fail_unserved_locked(deadline)
             self._running = False
             self._cv.notify_all()
         for _ in range(self.workers):
             self._flushq.put(None)
+        join_t = None if deadline is None else max(deadline, 1.0)
+        alive = []
         for t in self._threads:
-            t.join()
+            t.join(timeout=join_t)
+            if t.is_alive():
+                alive.append(t.name)
         self._threads.clear()
+        if alive:
+            with self._cv:
+                self.stats["abandoned_threads"] = \
+                    self.stats.get("abandoned_threads", 0) + len(alive)
+
+    def _fail_unserved_locked(self, deadline):
+        """Drain deadline expired: fail every unserved request (in-flight
+        batches first, then never-flushed pending, in admission order)
+        with a position-stamped ``ServerClosed``.  Caller holds the cv."""
+        backlog = [r for p in self._pending.values() for r in p.requests]
+        self._pending.clear()
+        victims = (sorted(self._dispatched.values(),
+                          key=lambda r: r.request_id)
+                   + sorted(backlog, key=lambda r: r.request_id))
+        victims = [r for r in victims if not r.settled]
+        for pos, r in enumerate(victims, 1):
+            r.settled = True
+            self._dispatched.pop(r.request_id, None)
+            r.future.set_exception(ServerClosed(
+                f"drain deadline ({deadline}s) expired with request "
+                f"{r.request_id} unserved at queue position "
+                f"{pos}/{len(victims)}", queue_position=pos))
+            self._tenant(r.tenant).record_failed()
+            self.stats["failed"] += 1
+            self.stats["drain_timeouts"] += 1
+            self._request_done()
 
     def __enter__(self):
         return self.start()
@@ -341,6 +403,8 @@ class PoissonServer:
             pend.requests = pend.requests[self.max_batch:]
             if not pend.requests:
                 del self._pending[key]
+            for r in take:
+                self._dispatched[r.request_id] = r
             self.stats["batches"] += 1
             self.stats["full_flushes" if full else
                        "drain_flushes" if self._draining and not aged else
@@ -365,14 +429,18 @@ class PoissonServer:
             try:
                 self._execute(key, spec, reqs)
             except BaseException as e:  # noqa: BLE001 -- fail the batch, not the server
-                for r in reqs:
+                with self._cv:
+                    fresh = [r for r in reqs if not r.settled]
+                    for r in fresh:
+                        r.settled = True
+                        self._dispatched.pop(r.request_id, None)
+                    self.stats["failed"] += len(fresh)
+                    for _ in fresh:
+                        self._request_done()
+                for r in fresh:
                     if not r.future.done():
                         r.future.set_exception(e)
                     self._tenant(r.tenant).record_failed()
-                with self._cv:
-                    self.stats["failed"] += len(reqs)
-                    for _ in reqs:
-                        self._request_done()
 
     def _execute(self, key, spec: PlanSpec, reqs):
         flush_t = time.perf_counter()
@@ -397,29 +465,39 @@ class PoissonServer:
             solver = spec.build() if plans \
                 else self.pool.acquire(key, spec.build)
             ndeg0 = len(solver.stats["degradations"])
+            nint0 = len(solver.stats.get("integrity", ()))
             t0 = time.perf_counter()
             ub = solver.solve(jnp.asarray(fb), verify=verify)
             ub = np.asarray(ub)
             solve_s = time.perf_counter() - t0
             degs = tuple(solver.stats["degradations"][ndeg0:])
+            ints = tuple(solver.stats.get("integrity", ())[nint0:])
         if not plans:                       # shadow solvers are transient
             self.pool.note_rank(key, rank)
         done_t = time.perf_counter()
+        with self._cv:
+            fresh = {r.request_id for r in reqs if not r.settled}
+            for r in reqs:
+                if r.request_id in fresh:
+                    r.settled = True
+                    self._dispatched.pop(r.request_id, None)
+            self.stats["completed"] += len(fresh)
+            self.stats["padded_rhs"] += rank - b
+            for _ in fresh:
+                self._request_done()
         for i, r in enumerate(reqs):
+            if r.request_id not in fresh:   # drain deadline beat us to it
+                continue
             res = SolveResult(
                 u=ub[i], request_id=r.request_id, tenant=r.tenant,
                 batch_size=b, padded_to=rank,
                 queue_wait_s=flush_t - r.admit_t, solve_s=solve_s,
-                total_s=done_t - r.admit_t, degradations=degs)
+                total_s=done_t - r.admit_t, degradations=degs,
+                integrity=ints)
             self._tenant(r.tenant).record(RequestRecord(
                 r.request_id, res.queue_wait_s, solve_s, res.total_s,
                 b, rank, degs))
             r.future.set_result(res)
-        with self._cv:
-            self.stats["completed"] += b
-            self.stats["padded_rhs"] += rank - b
-            for _ in reqs:
-                self._request_done()
 
     def _request_done(self):
         # caller holds self._cv

@@ -110,6 +110,63 @@ def test_transient_retry_then_exhaust():
     assert ei.value.stage == "s" and not ei.value.degradations
 
 
+def _retry_delays(policy, retries=6):
+    """Drive run_with_ladder with always-transient failures and capture
+    the backoff delays it would have slept."""
+    delays = []
+    cfg = {"engine": "xla", "relayout": "baseline", "doubling": "upfront"}
+
+    def attempt():
+        raise faults.InjectedFault("s", "error", transient=True)
+
+    with pytest.raises(SolveError):
+        resilience.run_with_ladder(
+            attempt, config=cfg, reconfigure=lambda c: None,
+            stats={"degradations": []}, policy=policy,
+            sleep=delays.append)
+    return delays
+
+
+def test_decorrelated_jitter_spreads_retry_storms():
+    """Co-batched tenants tripping on the same transient must NOT retry
+    in lockstep: seeded decorrelated jitter is deterministic per seed,
+    spread across seeds, and bounded by [base, max]; ``jitter="none"``
+    restores the fixed doubling schedule."""
+    mk = lambda **kw: resilience.RetryPolicy(
+        retries=6, base_delay=0.05, max_delay=1.0, **kw)
+    fixed = _retry_delays(mk(jitter="none"))
+    assert fixed == [0.05, 0.1, 0.2, 0.4, 0.8, 1.0]
+    a = _retry_delays(mk(seed=1))
+    assert a == _retry_delays(mk(seed=1)), "seeded jitter not reproducible"
+    assert all(0.05 <= d <= 1.0 for d in a)
+    # default schedule actually jitters: not the doubling ramp, and two
+    # tenants with different seeds retry at different times
+    assert a != fixed
+    others = [_retry_delays(mk(seed=s)) for s in range(2, 8)]
+    assert all(o != a for o in others)
+    # spread, not clustering: pairwise distinct delays at every step >1
+    step1 = {round(d[1], 9) for d in [a] + others}
+    assert len(step1) >= 5, f"retry storm not decorrelated: {step1}"
+
+
+def test_retry_seed_env_override(monkeypatch):
+    monkeypatch.setenv("REPRO_RETRY_SEED", "1234")
+    a = _retry_delays(resilience.RetryPolicy(retries=5, base_delay=0.05))
+    b = _retry_delays(resilience.RetryPolicy(retries=5, base_delay=0.05))
+    assert a == b, "$REPRO_RETRY_SEED did not pin the jitter RNG"
+    monkeypatch.setenv("REPRO_RETRY_SEED", "99")
+    assert _retry_delays(
+        resilience.RetryPolicy(retries=5, base_delay=0.05)) != a
+    # explicit seed wins over the environment
+    monkeypatch.setenv("REPRO_RETRY_SEED", "1234")
+    c = _retry_delays(resilience.RetryPolicy(retries=5, base_delay=0.05,
+                                             seed=7))
+    monkeypatch.delenv("REPRO_RETRY_SEED")
+    assert c == _retry_delays(resilience.RetryPolicy(retries=5,
+                                                     base_delay=0.05,
+                                                     seed=7))
+
+
 # -- solver-level recovery (single process, bit-exact) -----------------------
 
 def _rhs(shape, seed=0):

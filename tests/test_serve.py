@@ -242,6 +242,45 @@ def test_stop_drain_serves_everything():
     assert srv.server_stats()["completed"] == 3
 
 
+def test_drain_deadline_fails_wedged_requests():
+    """One wedged solve (a stalled collective, modelled by a ``stall``
+    fault sleeping 60s inside dispatch) must not hang ``stop(drain=True)``
+    forever: the deadline expires, every unserved request fails with a
+    position-stamped ``ServerClosed``, the wedged worker thread is
+    abandoned, and shutdown returns in bounded time."""
+    import time
+    spec = _spec(bcs=PER3)
+    plan = faults.FaultPlan([{"kind": "stall", "stage": "solve.dispatch",
+                              "seconds": 60.0}])
+    srv = PoissonServer(max_batch=1, max_delay_ms=1).start()
+    fs = _rhs(3, seed=9)
+    wedged = srv.submit(fs[0], spec, fault_plan=plan)
+    # let the wedged batch reach the worker so the deadline is the only
+    # way out, then pile clean requests behind it (workers=1)
+    deadline = time.monotonic() + 10
+    while srv.server_stats()["batches"] < 1 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    stuck = [srv.submit(f, spec) for f in fs[1:]]
+    t0 = time.monotonic()
+    srv.stop(drain=True, timeout=1.0)
+    assert time.monotonic() - t0 < 30, "drain deadline did not bound stop"
+    positions = []
+    for f in [wedged] + stuck:
+        with pytest.raises(ServerClosed) as ei:
+            f.result(timeout=1)
+        assert "drain deadline" in str(ei.value)
+        positions.append(ei.value.queue_position)
+    # every victim got a distinct 1-based queue position, in-flight first
+    assert sorted(positions) == [1, 2, 3], positions
+    assert positions[0] == 1, "wedged in-flight request must rank first"
+    st = srv.server_stats()
+    assert st["drain_timeouts"] == 3
+    assert st["failed"] >= 3 and st.get("abandoned_threads", 0) >= 1
+    # a stopped server still refuses new work cleanly
+    with pytest.raises(ServerClosed):
+        srv.submit(fs[0], spec)
+
+
 # -- stats -------------------------------------------------------------------
 
 def test_tenant_stats_percentiles_and_occupancy():
